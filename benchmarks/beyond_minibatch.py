@@ -1,0 +1,72 @@
+"""BEYOND-PAPER — mini-batch K-Means for Cluster-Coreset construction.
+
+The paper's CSS stage runs full Lloyd K-Means on every client
+(O(iters·N·k·d)). For the paper's largest datasets (HI 100k, YP 510k)
+the clustering becomes the stage bottleneck; Sculley-style mini-batch
+updates fit in O(iters·batch·k·d) + one assign pass. This benchmark
+measures construction-time speedup AND the downstream effect on coreset
+quality (same selection pipeline, same downstream model).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import dataset_partitions, emit, fmt
+from repro.core import SplitNNConfig, cluster_coreset
+from repro.core.splitnn import evaluate, train_splitnn
+
+JOBS = [("HI", "lr", 2, 0.05, 12), ("YP", "linreg", 0, 0.05, 12),
+        ("RI", "lr", 2, 0.05, 8)]
+
+
+def run(quick: bool = True):
+    _build_time_at_scale(quick)
+    rows = []
+    for ds, model, n_classes, lr, k in JOBS:
+        tr, te = dataset_partitions(ds, quick=quick)
+        cfg = SplitNNConfig(model=model, n_classes=n_classes, lr=lr,
+                            batch_size=max(8, tr.n_samples // 100),
+                            max_epochs=60 if quick else 200)
+        for algo in ("lloyd", "minibatch"):
+            # warm the jit caches so we time the algorithm, not XLA
+            cluster_coreset(tr, k, seed=0, kmeans_algo=algo)
+            t0 = time.perf_counter()
+            res = cluster_coreset(tr, k, seed=0, kmeans_algo=algo)
+            build_wall = time.perf_counter() - t0
+            rep = train_splitnn(tr.take(res.indices), cfg,
+                                sample_weights=res.weights)
+            metric = evaluate(rep.params, cfg, te)
+            rows.append(dict(
+                dataset=ds, model=model, algo=algo,
+                coreset=len(res.indices),
+                build_makespan_s=fmt(res.makespan_seconds),
+                build_wall_s=fmt(build_wall),
+                metric=fmt(metric, 4)))
+    emit(rows, "beyond_minibatch")
+
+
+def _build_time_at_scale(quick: bool):
+    """Construction-time scaling: paper-scale N where Lloyd's O(N·k·d·iters)
+    bites (the quality comparison above runs at quick sizes)."""
+    from repro.data.synthetic import DATASETS, make_dataset
+    from repro.data.vertical import partition_features
+    rows = []
+    n = 100_000 if quick else 510_000
+    x, y = make_dataset(DATASETS["YP"], seed=0, n_override=n)
+    part = partition_features(x, y, 3)
+    for algo in ("lloyd", "minibatch"):
+        cluster_coreset(part.take(np.arange(2048)), 12, seed=0,
+                        kmeans_algo=algo)       # jit warm (small shape)
+        t0 = time.perf_counter()
+        res = cluster_coreset(part, 12, seed=0, kmeans_algo=algo)
+        wall = time.perf_counter() - t0
+        rows.append(dict(n=n, algo=algo, coreset=len(res.indices),
+                         build_wall_s=fmt(wall),
+                         makespan_s=fmt(res.makespan_seconds)))
+    emit(rows, "beyond_minibatch_scale")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""Shared benchmark utilities: dataset prep, CSV emission, timing."""
+from __future__ import annotations
+
+import os
+import sys
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.data.synthetic import DATASETS, make_dataset
+from repro.data.vertical import VerticalPartition, partition_features
+
+OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "experiments/bench")
+
+# CPU-budget dataset scale: the paper's sizes divided by ~10 so the full
+# suite runs on this 1-core container; relative comparisons preserved.
+QUICK_N = {"BA": 2000, "MU": 1600, "RI": 3000, "HI": 4000, "BP": 2600,
+           "YP": 4000}
+
+
+def emit(rows: List[Dict], name: str, keys: Optional[Sequence[str]] = None
+         ) -> None:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    if not rows:
+        return
+    keys = list(keys or rows[0].keys())
+    path = os.path.join(OUT_DIR, f"{name}.csv")
+    with open(path, "w") as f:
+        f.write(",".join(keys) + "\n")
+        for r in rows:
+            f.write(",".join(str(r.get(k, "")) for k in keys) + "\n")
+    print(f"\n== {name} -> {path}")
+    widths = [max(len(k), *(len(str(r.get(k, ""))) for r in rows))
+              for k in keys]
+    print(" | ".join(k.ljust(w) for k, w in zip(keys, widths)))
+    for r in rows:
+        print(" | ".join(str(r.get(k, "")).ljust(w)
+                         for k, w in zip(keys, widths)))
+
+
+def dataset_partitions(name: str, *, n_clients: int = 3, seed: int = 0,
+                       quick: bool = True):
+    """Paper protocol: 70/30 train/test split, features equally over 3
+    clients, labels at the label owner."""
+    spec = DATASETS[name]
+    n = QUICK_N[name] if quick else spec.n_instances
+    x, y = make_dataset(spec, seed=seed, n_override=n)
+    rng = np.random.default_rng(seed + 1)
+    order = rng.permutation(n)
+    n_tr = int(n * 0.7)
+    tr = partition_features(x[order[:n_tr]], y[order[:n_tr]], n_clients)
+    te = partition_features(x[order[n_tr:]], y[order[n_tr:]], n_clients)
+    return tr, te
+
+
+def fmt(x, nd=3):
+    if isinstance(x, float):
+        return f"{x:.{nd}f}"
+    return x

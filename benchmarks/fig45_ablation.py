@@ -1,0 +1,45 @@
+"""Figs. 4 & 5 — sensitivity to clusters-per-client and the effect of
+coreset re-weighting, on MU / HI / BP / YP (the paper's four).
+
+Paper claims: more clusters → bigger coreset → better quality but more
+time; re-weighting helps most at small cluster counts and costs little.
+"""
+from __future__ import annotations
+
+from benchmarks.common import dataset_partitions, emit, fmt
+from repro.core import SplitNNConfig, run_pipeline
+
+JOBS = [
+    ("MU", "mlp", 2, 0.01),
+    ("HI", "lr", 2, 0.05),
+    ("BP", "mlp", 4, 0.01),
+    ("YP", "linreg", 0, 0.05),
+]
+
+CLUSTERS = (2, 4, 8, 16)
+
+
+def run(quick: bool = True):
+    rows = []
+    for ds, model, n_classes, lr in JOBS:
+        tr, te = dataset_partitions(ds, quick=quick)
+        cfg = SplitNNConfig(model=model, n_classes=n_classes, lr=lr,
+                            batch_size=max(8, tr.n_samples // 100),
+                            max_epochs=50 if quick else 200)
+        for k in CLUSTERS:
+            for weighted in (True, False):
+                rep = run_pipeline(tr, te, cfg, variant="treecss",
+                                   clusters_per_client=k,
+                                   use_weights=weighted, protocol="oprf",
+                                   seed=0)
+                rows.append(dict(
+                    dataset=ds, model=model, clusters=k,
+                    weighted=weighted, coreset=rep.n_train,
+                    metric=fmt(rep.metric, 4),
+                    train_s=fmt(rep.train_seconds, 2),
+                    total_s=fmt(rep.total_seconds, 2)))
+    emit(rows, "fig45_ablation")
+
+
+if __name__ == "__main__":
+    run()

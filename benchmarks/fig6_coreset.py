@@ -1,0 +1,55 @@
+"""Fig. 6 — Cluster-Coreset (TreeCSS) vs V-coreset at MATCHED coreset
+sizes, classification (accuracy) and regression (MSE).
+
+Paper claims: under the same coreset size, TreeCSS tests better than
+V-coreset; data-volume reduction up to 98.4% (RI).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import dataset_partitions, emit, fmt
+from repro.core import SplitNNConfig, cluster_coreset
+from repro.core.splitnn import evaluate, train_splitnn
+from repro.core.vcoreset import vcoreset
+
+JOBS = [
+    ("BA", "lr", 2, 0.05),
+    ("RI", "lr", 2, 0.05),
+    ("HI", "lr", 2, 0.05),
+    ("YP", "linreg", 0, 0.05),
+]
+
+CLUSTERS = (4, 8, 16)
+
+
+def run(quick: bool = True):
+    rows = []
+    for ds, model, n_classes, lr in JOBS:
+        tr, te = dataset_partitions(ds, quick=quick)
+        cfg = SplitNNConfig(model=model, n_classes=n_classes, lr=lr,
+                            batch_size=max(8, tr.n_samples // 100),
+                            max_epochs=60 if quick else 200)
+        for k in CLUSTERS:
+            cc = cluster_coreset(tr, k, seed=0)
+            size = len(cc.indices)
+            # ours
+            sub = tr.take(cc.indices)
+            rep = train_splitnn(sub, cfg, sample_weights=cc.weights)
+            ours = evaluate(rep.params, cfg, te)
+            # V-coreset at the SAME size
+            vi, vw = vcoreset(tr, size, seed=0)
+            vrep = train_splitnn(tr.take(vi), cfg, sample_weights=vw)
+            theirs = evaluate(vrep.params, cfg, te)
+            rows.append(dict(
+                dataset=ds, model=model, clusters=k, coreset=size,
+                reduction_pct=fmt(100 * (1 - size / tr.n_samples), 1),
+                treecss=fmt(ours, 4), vcoreset=fmt(theirs, 4),
+                better=("treecss"
+                        if ((ours >= theirs) if n_classes else
+                            (ours <= theirs)) else "vcoreset")))
+    emit(rows, "fig6_coreset")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Roofline report — aggregates the dry-run JSONs (deliverable g) into the
+per-(arch × shape × mesh) table of EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import OUT_DIR, emit, fmt
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_OUT", "experiments/dryrun")
+
+
+def load_records(variant: str = "baseline"):
+    recs = []
+    for path in sorted(glob.glob(f"{DRYRUN_DIR}/*.json")):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("variant", "baseline") == variant:
+            recs.append(r)
+    return recs
+
+
+def run(quick: bool = True, variant: str = "baseline"):
+    rows = []
+    for r in load_records(variant):
+        base = dict(arch=r["arch"], shape=r["shape"], mesh=r["mesh"])
+        if r["status"] == "skipped":
+            rows.append(dict(**base, status="SKIP", note=r["reason"][:40]))
+            continue
+        if r["status"] == "failed":
+            rows.append(dict(**base, status="FAIL",
+                             note=r.get("error", "")[:40]))
+            continue
+        t = r["roofline"]
+        rows.append(dict(
+            **base, status="ok",
+            compute_ms=fmt(t["compute_s"] * 1e3, 1),
+            memory_ms=fmt(t["memory_s"] * 1e3, 1),
+            collective_ms=fmt(t["collective_s"] * 1e3, 1),
+            dominant=t["dominant"].replace("_s", ""),
+            useful_ratio=fmt(t["useful_compute_ratio"], 3),
+            peak_gib=fmt((r["memory"]["peak_bytes"] or 0) / 2 ** 30, 2),
+            note=""))
+    if rows:
+        emit(rows, f"roofline_{variant}")
+    else:
+        print(f"[roofline] no dry-run records in {DRYRUN_DIR} "
+              f"(run `python -m repro.launch.dryrun --all` first)")
+
+
+if __name__ == "__main__":
+    run()

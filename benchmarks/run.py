@@ -1,0 +1,42 @@
+"""Benchmark driver: one module per paper table/figure + the roofline
+report. ``PYTHONPATH=src python -m benchmarks.run [--full]``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (hours); default quick sizes")
+    ap.add_argument("--only", default="",
+                    help="comma-list: fig7,table2,fig45,fig6,roofline")
+    args = ap.parse_args()
+    quick = not args.full
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (beyond_minibatch, fig6_coreset, fig7_mpsi,
+                            fig45_ablation, roofline, table2_framework)
+    jobs = [
+        ("fig7", fig7_mpsi.run),          # Fig 7 a/b/c: MPSI comparison
+        ("table2", table2_framework.run),  # Table 2: framework end-to-end
+        ("fig45", fig45_ablation.run),     # Figs 4&5: clusters + weighting
+        ("fig6", fig6_coreset.run),        # Fig 6: vs V-coreset
+        ("beyond", beyond_minibatch.run),  # beyond-paper: minibatch CSS
+        ("roofline", roofline.run),        # §Roofline report (dry-run JSONs)
+    ]
+    t00 = time.perf_counter()
+    for name, fn in jobs:
+        if only and name not in only:
+            continue
+        print(f"\n######## {name} ########")
+        t0 = time.perf_counter()
+        fn(quick=quick)
+        print(f"[{name}] done in {time.perf_counter()-t0:.1f}s")
+    print(f"\nALL BENCHMARKS DONE in {time.perf_counter()-t00:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Beyond-paper: Cluster-Coreset weights driving WEIGHTED LM TRAINING.
+
+The paper's Eq. (2) is model-agnostic; this example applies it to the LLM
+stack: each "client" holds a vertical slice of per-sequence feature
+embeddings, Cluster-Coreset selects representative sequences and weights
+them, and a reduced assigned-architecture LM trains with the weighted loss
+— the framework's ``weights`` batch key end to end.
+
+    PYTHONPATH=src python examples/coreset_lm.py --arch tinyllama-1.1b \
+        --steps 30
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core.coreset import cluster_coreset
+from repro.data.pipeline import synthesize_tokens
+from repro.data.vertical import partition_features
+from repro.train.steps import init_train_state, make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b", choices=ARCH_IDS)
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--pool", type=int, default=512,
+                    help="candidate sequence pool size")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--clusters", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    rng = np.random.default_rng(0)
+
+    # --- candidate pool: sequences + per-sequence features on 3 clients
+    pool = synthesize_tokens(rng, args.pool, args.seq, cfg.vocab)
+    # stub per-sequence embeddings (e.g. pooled encoder features),
+    # vertically partitioned — each client sees its own feature slice
+    feats = np.stack([np.bincount(row, minlength=cfg.vocab)[:24]
+                      for row in pool]).astype(np.float32)
+    labels = (feats[:, :8].sum(1) > np.median(feats[:, :8].sum(1))
+              ).astype(np.int64)
+    part = partition_features(feats, labels, 3)
+
+    res = cluster_coreset(part, args.clusters, seed=0)
+    print(f"coreset: {len(res.indices)}/{args.pool} sequences "
+          f"({res.n_groups} CT-groups), weight range "
+          f"[{res.weights.min():.2f}, {res.weights.max():.2f}]")
+
+    core_tokens = pool[res.indices]
+    core_weights = res.weights
+
+    params, opt = init_train_state(jax.random.PRNGKey(0), cfg)
+    step = jax.jit(make_train_step(cfg, lr=3e-4))
+    order = rng.permutation(len(core_tokens))
+    for i in range(args.steps):
+        idx = order[(i * args.batch) % len(order):][:args.batch]
+        if len(idx) < args.batch:
+            order = rng.permutation(len(core_tokens))
+            idx = order[:args.batch]
+        batch = {"tokens": jnp.asarray(core_tokens[idx]),
+                 "labels": jnp.asarray(core_tokens[idx]),
+                 "weights": jnp.asarray(core_weights[idx])}
+        if cfg.family == "vlm":
+            batch["patches"] = jnp.zeros(
+                (args.batch, cfg.vision_tokens, cfg.d_model), jnp.float32)
+        if cfg.family == "audio":
+            batch["frames"] = jnp.zeros(
+                (args.batch, cfg.enc_seq, cfg.d_model), jnp.float32)
+        params, opt, metrics = step(params, opt, batch)
+        if i % 5 == 0 or i == args.steps - 1:
+            print(f"step {i:3d}  weighted-loss {float(metrics['loss']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Serve a small model with batched requests: prefill + greedy decode.
+
+    PYTHONPATH=src python examples/serve_decode.py --arch mamba2-1.3b \
+        --requests 4 --new-tokens 16
+
+Exercises the framework's serving substrate — ring-buffer / SSM-state
+caches, batched single-token serve steps — on a reduced config.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import api
+from repro.serve.engine import greedy_decode
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b", choices=ARCH_IDS)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(
+        0, cfg.vocab, (args.requests, args.prompt_len)), jnp.int32)
+
+    extra = None
+    if cfg.family == "audio":
+        extra = jnp.asarray(rng.normal(
+            0, 1, (args.requests, cfg.enc_seq, cfg.d_model)), jnp.float32)
+    if cfg.family == "vlm":
+        extra = jnp.asarray(rng.normal(
+            0, 1, (args.requests, cfg.vision_tokens, cfg.d_model)),
+            jnp.float32)
+
+    t0 = time.perf_counter()
+    out = greedy_decode(params, cfg, prompts, args.new_tokens,
+                        extra_embeds=extra)
+    dt = time.perf_counter() - t0
+    toks = args.requests * args.new_tokens
+    print(f"arch={cfg.arch_id} batch={args.requests} "
+          f"decoded {args.new_tokens} tokens/request "
+          f"in {dt:.2f}s ({toks/dt:.1f} tok/s on CPU)")
+    for i, row in enumerate(np.asarray(out)):
+        print(f"req{i}: {row.tolist()}")
+
+
+if __name__ == "__main__":
+    main()

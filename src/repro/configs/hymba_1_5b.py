@@ -1,0 +1,20 @@
+"""Hymba-1.5B [arXiv:2411.13676] — hybrid: parallel attn + mamba heads,
+meta tokens, sliding-window attention except 3 global layers."""
+from repro.configs.base import ArchConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    arch_id="hymba-1.5b",
+    family="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    d_ff=5504,
+    vocab=32001,
+    head_dim=64,
+    sliding_window=1024,
+    hybrid_meta_tokens=128,
+    hybrid_global_layers=(0, 15, 31),
+    ssm=SSMConfig(state_dim=16, head_dim=64, expand=2, chunk=128),
+    source="arXiv:2411.13676",
+)

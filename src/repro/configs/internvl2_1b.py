@@ -1,0 +1,23 @@
+"""InternVL2-1B [arXiv:2404.16821] — InternViT (stub) + InternLM2/Qwen2-0.5B LM.
+
+Vision encoder + projector are a STUB per the assignment carve-out:
+input_specs() provides precomputed patch embeddings (batch, vision_tokens,
+d_model) that are prepended to the text sequence.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="internvl2-1b",
+    family="vlm",
+    n_layers=24,
+    d_model=896,
+    n_heads=14,
+    n_kv_heads=2,
+    d_ff=4864,
+    vocab=151655,
+    head_dim=64,
+    qkv_bias=True,
+    vision_tokens=256,
+    rope_theta=1000000.0,
+    source="arXiv:2404.16821",
+)

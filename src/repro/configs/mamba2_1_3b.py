@@ -1,0 +1,15 @@
+"""Mamba2-1.3B [arXiv:2405.21060] — attention-free SSD (state-space duality)."""
+from repro.configs.base import ArchConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    arch_id="mamba2-1.3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=0,              # attention-free
+    n_kv_heads=0,
+    d_ff=0,
+    vocab=50280,
+    ssm=SSMConfig(state_dim=128, head_dim=64, expand=2, chunk=128),
+    source="arXiv:2405.21060",
+)

@@ -1,0 +1,17 @@
+"""OLMoE-1B-7B [arXiv:2409.02060] — 64-expert top-8 MoE, MHA (kv=16)."""
+from repro.configs.base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    arch_id="olmoe-1b-7b",
+    family="moe",
+    n_layers=16,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1024,
+    vocab=50304,
+    head_dim=128,
+    rope_theta=10000.0,
+    moe=MoEConfig(num_experts=64, top_k=8),
+    source="arXiv:2409.02060",
+)

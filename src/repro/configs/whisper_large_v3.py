@@ -1,0 +1,22 @@
+"""Whisper-large-v3 [arXiv:2212.04356] — enc-dec transformer backbone.
+
+Conv/mel frontend is a STUB per the assignment carve-out: input_specs()
+provides precomputed frame embeddings of shape (batch, enc_seq, d_model).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="whisper-large-v3",
+    family="audio",
+    n_layers=32,            # decoder layers
+    enc_layers=32,          # encoder layers
+    enc_seq=1500,           # 30 s of audio after conv frontend
+    d_model=1280,
+    n_heads=20,
+    n_kv_heads=20,
+    d_ff=5120,
+    vocab=51866,
+    head_dim=64,
+    qkv_bias=True,
+    source="arXiv:2212.04356",
+)

@@ -1,0 +1,34 @@
+"""TreeCSS core: the paper's contribution.
+
+  tpsi      — two-party PSI primitives (RSA blind signature, OPRF/OT)
+  mpsi      — Tree-MPSI (ours) + Path/Star baselines, volume-aware scheduling
+  kmeans    — JAX K-Means (Pallas-accelerated assign step)
+  coreset   — Cluster-Coreset construction + distance-rank weighting
+  vcoreset  — V-coreset (leverage-score) baseline
+  splitnn   — SplitNN VFL runtime with communication accounting
+  treecss   — end-to-end pipeline: align → coreset → weighted training
+  he        — additive Paillier (protocol-fidelity stub)
+"""
+from repro.core.coreset import (ClientClustering, CoresetResult,
+                                cluster_coreset, local_cluster_weights,
+                                select_coreset)
+from repro.core.kmeans import kmeans, kmeans_fit
+from repro.core.mpsi import (MPSI, MPSIStats, path_mpsi, star_mpsi,
+                             tree_mpsi)
+from repro.core.splitnn import (SplitNNConfig, TrainReport, evaluate,
+                                knn_predict, predict, train_splitnn)
+from repro.core.tpsi import TPSIResult, run_tpsi, tpsi_oprf, tpsi_rsa
+from repro.core.treecss import PipelineReport, run_pipeline
+from repro.core.vcoreset import vcoreset
+
+__all__ = [
+    "ClientClustering", "CoresetResult", "cluster_coreset",
+    "local_cluster_weights", "select_coreset",
+    "kmeans", "kmeans_fit",
+    "MPSI", "MPSIStats", "path_mpsi", "star_mpsi", "tree_mpsi",
+    "SplitNNConfig", "TrainReport", "evaluate", "knn_predict", "predict",
+    "train_splitnn",
+    "TPSIResult", "run_tpsi", "tpsi_oprf", "tpsi_rsa",
+    "PipelineReport", "run_pipeline",
+    "vcoreset",
+]

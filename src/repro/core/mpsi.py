@@ -1,0 +1,234 @@
+"""Multi-party PSI: Tree-MPSI (the paper, §4.1) + Path/Star baselines.
+
+The host is single-machine, so concurrency is *simulated faithfully*: every
+round's wall time is the MAX over its concurrent TPSI pairs (tree), while
+path/star serialize where their topology forces it. Network time is modeled
+from the counted bytes at a configurable bandwidth/latency (paper cluster:
+10 Gbps), and compute time is the *measured* host crypto time of each TPSI.
+
+Tree-MPSI (paper steps 1-5):
+  1/2. active clients request; scheduler pairs them,
+  3.   server tells each client its partner,
+  4.   concurrent TPSI per pair — the receiver keeps the intersection and
+       stays active for the next round,
+  5.   the last holder HE-encrypts the aligned ID list; the server relays it
+       to everyone (server never sees plaintext — it has no private key).
+
+Volume-aware scheduling (paper §4.1 "Scheduling optimization"):
+  sort active clients by ResLen ascending → pair c_k with c_{k+⌈U/2⌉} →
+  RSA: smaller side is receiver; OPRF: larger side is receiver.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import he
+from repro.core.tpsi import ID_BYTES, TPSIResult, run_tpsi
+
+DEFAULT_BANDWIDTH = 10e9 / 8     # 10 Gbps in bytes/s (paper's cluster)
+DEFAULT_LATENCY = 2e-4           # per message
+
+
+@dataclasses.dataclass
+class MPSIStats:
+    intersection: np.ndarray
+    rounds: int
+    total_bytes: int
+    total_messages: int
+    simulated_seconds: float       # makespan: compute + modeled network
+    compute_seconds: float         # sum of measured crypto time
+    per_round_seconds: List[float]
+    schedule: List[List[Tuple[int, int]]]   # per round: (sender, receiver)
+
+
+def _net_time(bytes_: int, bandwidth: float, latency: float,
+              messages: int = 1) -> float:
+    return bytes_ / bandwidth + latency * messages
+
+
+def _pair_time(res: TPSIResult, bandwidth: float, latency: float) -> float:
+    return res.compute_seconds + _net_time(res.total_bytes, bandwidth,
+                                           latency, res.messages)
+
+
+def _broadcast_result(inter: np.ndarray, n_clients: int, *, use_he: bool,
+                      bandwidth: float, latency: float
+                      ) -> Tuple[int, int, float]:
+    """Step 5: holder HE-encrypts [N_align], server relays to all clients.
+
+    Returns (bytes, messages, seconds). With use_he=False we still count the
+    relay traffic at ID_BYTES per id (used by baselines for fairness).
+    """
+    n = len(inter)
+    if use_he:
+        pk, sk = he.keygen(256, seed=7)  # small key: relay fidelity only
+        t0 = time.perf_counter()
+        sample = [he.encrypt(pk, int(x) % pk.n) for x in inter[:64]]
+        if sample:
+            _ = [he.decrypt(sk, c) for c in sample]
+        t_he = (time.perf_counter() - t0) * (max(n, 1) / max(len(sample), 1))
+        per_id = pk.ciphertext_bytes()
+    else:
+        t_he, per_id = 0.0, ID_BYTES
+    up = n * per_id
+    down = n * per_id * n_clients
+    secs = t_he + _net_time(up + down, bandwidth, latency, 1 + n_clients)
+    return up + down, 1 + n_clients, secs
+
+
+def _greedy_pairs(order: Sequence[int]) -> Tuple[List[Tuple[int, int]],
+                                                 Optional[int]]:
+    """Pair k with k+⌈U/2⌉ over an (already sorted) index list."""
+    u = len(order)
+    half = math.ceil(u / 2)
+    pairs = [(order[k], order[k + half]) for k in range(u // 2)]
+    passthrough = order[half - 1] if u % 2 else None
+    return pairs, passthrough
+
+
+def tree_mpsi(id_sets: Sequence[np.ndarray], *, protocol: str = "rsa",
+              volume_aware: bool = True,
+              bandwidth: float = DEFAULT_BANDWIDTH,
+              latency: float = DEFAULT_LATENCY,
+              use_he: bool = True) -> MPSIStats:
+    """Tree-MPSI over ``m`` id sets. O(log m) concurrent rounds."""
+    m = len(id_sets)
+    holdings: Dict[int, np.ndarray] = {i: np.asarray(s) for i, s in
+                                       enumerate(id_sets)}
+    active = list(range(m))
+    total_bytes = total_msgs = 0
+    compute = 0.0
+    per_round: List[float] = []
+    schedule: List[List[Tuple[int, int]]] = []
+
+    while len(active) > 1:
+        if volume_aware:
+            order = sorted(active, key=lambda c: len(holdings[c]))
+            pairs, passthrough = _greedy_pairs(order)
+        else:
+            # unoptimized baseline: sequential pairing by request order
+            order = list(active)
+            pairs = [(order[2 * k], order[2 * k + 1])
+                     for k in range(len(order) // 2)]
+            passthrough = order[-1] if len(order) % 2 else None
+        round_sched: List[Tuple[int, int]] = []
+        round_times: List[float] = []
+        next_active: List[int] = []
+        for a, b in pairs:
+            la, lb = len(holdings[a]), len(holdings[b])
+            small, big = (a, b) if la <= lb else (b, a)
+            if protocol == "rsa":
+                receiver, sender = small, big   # smaller side receives
+            else:
+                receiver, sender = big, small   # larger side receives
+            if not volume_aware:
+                # request order: earlier requester is sender (paper step 2)
+                sender, receiver = a, b
+            res = run_tpsi(protocol, holdings[sender], holdings[receiver])
+            holdings[receiver] = res.intersection
+            total_bytes += res.total_bytes
+            total_msgs += res.messages
+            compute += res.compute_seconds
+            round_times.append(_pair_time(res, bandwidth, latency))
+            round_sched.append((sender, receiver))
+            next_active.append(receiver)
+        if passthrough is not None:
+            next_active.append(passthrough)
+        active = next_active
+        per_round.append(max(round_times) if round_times else 0.0)
+        schedule.append(round_sched)
+
+    inter = holdings[active[0]]
+    b_bytes, b_msgs, b_secs = _broadcast_result(
+        inter, m, use_he=use_he, bandwidth=bandwidth, latency=latency)
+    total_bytes += b_bytes
+    total_msgs += b_msgs
+    per_round.append(b_secs)
+
+    return MPSIStats(
+        intersection=inter, rounds=len(schedule),
+        total_bytes=total_bytes, total_messages=total_msgs,
+        simulated_seconds=sum(per_round), compute_seconds=compute,
+        per_round_seconds=per_round, schedule=schedule)
+
+
+def path_mpsi(id_sets: Sequence[np.ndarray], *, protocol: str = "rsa",
+              bandwidth: float = DEFAULT_BANDWIDTH,
+              latency: float = DEFAULT_LATENCY,
+              use_he: bool = True) -> MPSIStats:
+    """Path topology: client i TPSIs with client i+1 — O(m) sequential rounds."""
+    m = len(id_sets)
+    cur = np.asarray(id_sets[0])
+    total_bytes = total_msgs = 0
+    compute = 0.0
+    per_round: List[float] = []
+    schedule: List[List[Tuple[int, int]]] = []
+    for i in range(1, m):
+        res = run_tpsi(protocol, cur, np.asarray(id_sets[i]))
+        cur = res.intersection
+        total_bytes += res.total_bytes
+        total_msgs += res.messages
+        compute += res.compute_seconds
+        per_round.append(_pair_time(res, bandwidth, latency))
+        schedule.append([(i - 1, i)])
+    b_bytes, b_msgs, b_secs = _broadcast_result(
+        cur, m, use_he=use_he, bandwidth=bandwidth, latency=latency)
+    total_bytes += b_bytes
+    total_msgs += b_msgs
+    per_round.append(b_secs)
+    return MPSIStats(
+        intersection=cur, rounds=m - 1, total_bytes=total_bytes,
+        total_messages=total_msgs, simulated_seconds=sum(per_round),
+        compute_seconds=compute, per_round_seconds=per_round,
+        schedule=schedule)
+
+
+def star_mpsi(id_sets: Sequence[np.ndarray], *, protocol: str = "rsa",
+              center: int = 0, bandwidth: float = DEFAULT_BANDWIDTH,
+              latency: float = DEFAULT_LATENCY,
+              use_he: bool = True) -> MPSIStats:
+    """Star topology: the center TPSIs with every other client.
+
+    O(1) logical rounds, but the central server engages the spokes one at a
+    time ("the central node runs TPSI separately with each of the remaining
+    nodes"): each request/response session is data-dependent (blind → sign →
+    unblind), so the makespan sums the FULL pair time of all m-1 sessions —
+    the paper's "central bottleneck" critique. All traffic also crosses the
+    center's NIC.
+    """
+    m = len(id_sets)
+    cur = np.asarray(id_sets[center])
+    total_bytes = total_msgs = 0
+    compute = 0.0
+    center_busy = 0.0
+    schedule: List[List[Tuple[int, int]]] = [[]]
+    for i in range(m):
+        if i == center:
+            continue
+        # center acts as receiver (it accumulates the running intersection)
+        res = run_tpsi(protocol, np.asarray(id_sets[i]), cur)
+        cur = res.intersection
+        total_bytes += res.total_bytes
+        total_msgs += res.messages
+        compute += res.compute_seconds
+        # serialized center session: both sides' (interleaved) crypto plus
+        # the session traffic through the center's NIC
+        center_busy += _pair_time(res, bandwidth, latency)
+        schedule[0].append((i, center))
+    b_bytes, b_msgs, b_secs = _broadcast_result(
+        cur, m, use_he=use_he, bandwidth=bandwidth, latency=latency)
+    total_bytes += b_bytes
+    total_msgs += b_msgs
+    return MPSIStats(
+        intersection=cur, rounds=1, total_bytes=total_bytes,
+        total_messages=total_msgs, simulated_seconds=center_busy + b_secs,
+        compute_seconds=compute, per_round_seconds=[center_busy, b_secs],
+        schedule=schedule)
+
+
+MPSI = {"tree": tree_mpsi, "path": path_mpsi, "star": star_mpsi}

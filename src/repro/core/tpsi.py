@@ -1,0 +1,238 @@
+"""Two-party PSI (TPSI) primitives — RSA blind signature and OPRF/OT flavors.
+
+Both protocols are implemented end-to-end on host (crypto is integer work,
+not MXU work — see DESIGN.md §3) with *byte-level communication accounting*
+so the MPSI schedulers above them can reproduce the paper's cost model:
+
+  RSA flavor: receiver blinds + unblinds (transmits twice: the blinded set
+  up, and implicitly holds the result), sender signs once and ships its own
+  signature set — worst case O(2·|recv| + |send|) transmitted elements.
+  → volume-aware role choice: SMALLER party should be receiver (paper §4.1).
+
+  OPRF/OT flavor: the sender evaluates the PRF over its whole set and ships
+  it — O(|send|) dominates. → LARGER party should be receiver (sender =
+  smaller side ships less).
+
+Returned ``TPSIResult`` carries the intersection, per-direction byte counts,
+message counts, and measured compute seconds for the schedulers' makespan
+simulation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import math
+import secrets
+import time
+from typing import Dict, List, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.core import he
+
+# --------------------------------------------------------------- accounting
+
+ID_BYTES = 8            # an id on the wire (u64)
+HASH_BYTES = 32         # sha-256 digest
+
+
+@dataclasses.dataclass
+class TPSIResult:
+    intersection: np.ndarray          # sorted ids
+    bytes_to_sender: int              # receiver -> sender traffic
+    bytes_to_receiver: int            # sender -> receiver traffic
+    messages: int
+    compute_seconds: float            # measured host crypto time
+    sender_compute_seconds: float
+    receiver_compute_seconds: float
+
+    @property
+    def total_bytes(self) -> int:
+        return self.bytes_to_sender + self.bytes_to_receiver
+
+
+def _h_to_group(x: int, n: int) -> int:
+    d = hashlib.sha256(int(x).to_bytes(8, "little")).digest()
+    return int.from_bytes(d, "little") % n
+
+
+def _h2(x: int) -> bytes:
+    return hashlib.sha256(x.to_bytes((x.bit_length() + 7) // 8 or 1,
+                                     "little")).digest()
+
+
+# ------------------------------------------------------------- RSA-blind-sig
+
+@dataclasses.dataclass(frozen=True)
+class RSAKey:
+    n: int
+    e: int
+    d: int
+    # CRT components (sender-private) — standard 3-4x signing speedup
+    p: int = 0
+    q: int = 0
+    dp: int = 0
+    dq: int = 0
+    qinv: int = 0
+
+    def modulus_bytes(self) -> int:
+        return (self.n.bit_length() + 7) // 8
+
+    def sign(self, x: int) -> int:
+        """x^d mod n via CRT when available."""
+        if not self.p:
+            return pow(x, self.d, self.n)
+        mp = pow(x % self.p, self.dp, self.p)
+        mq = pow(x % self.q, self.dq, self.q)
+        h = (self.qinv * (mp - mq)) % self.p
+        return mq + h * self.q
+
+
+_RSA_E = 65537
+
+
+def rsa_keygen(bits: int = 512, *, seed: int | None = None) -> RSAKey:
+    if seed is not None:
+        import random
+        rng = random.Random(seed)
+    else:
+        rng = secrets.SystemRandom()
+    while True:
+        p = he._gen_prime(bits // 2, rng)
+        q = he._gen_prime(bits // 2, rng)
+        if p == q:
+            continue
+        n = p * q
+        phi = (p - 1) * (q - 1)
+        if math.gcd(_RSA_E, phi) == 1:
+            d = pow(_RSA_E, -1, phi)
+            return RSAKey(n, _RSA_E, d, p=p, q=q,
+                          dp=d % (p - 1), dq=d % (q - 1),
+                          qinv=pow(q, -1, p))
+
+
+def tpsi_rsa(sender_ids: Sequence[int], receiver_ids: Sequence[int], *,
+             key: RSAKey | None = None) -> TPSIResult:
+    """RSA-blind-signature PSI. The RECEIVER learns the intersection.
+
+    Wire protocol (counted):
+      1. sender -> receiver : public key (negligible)
+      2. receiver -> sender : |R| blinded hashes          (|R| · modbytes)
+      3. sender -> receiver : |R| blind signatures        (|R| · modbytes)
+                              + |S| hashed own signatures (|S| · HASH_BYTES)
+      => receiver-side traffic 2·|R|·modbytes dominates when |R| large —
+         hence "smaller party should receive".
+    """
+    key = key or default_rsa_key()
+    n, e, d = key.n, key.e, key.d
+    mb = key.modulus_bytes()
+
+    t0 = time.perf_counter()
+    # receiver blinds
+    blinds: List[int] = []
+    rs: List[int] = []
+    for y in receiver_ids:
+        r = secrets.randbelow(n - 2) + 2
+        rs.append(r)
+        blinds.append(_h_to_group(y, n) * pow(r, e, n) % n)
+    t_recv_blind = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    # sender signs receiver's blinds and its own hashes
+    signed_blinds = [key.sign(b) for b in blinds]
+    sender_tags: Set[bytes] = {_h2(key.sign(_h_to_group(x, n)))
+                               for x in sender_ids}
+    t_send = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    # receiver unblinds and intersects
+    inter = []
+    for y, sb, r in zip(receiver_ids, signed_blinds, rs):
+        sig = sb * pow(r, -1, n) % n
+        if _h2(sig) in sender_tags:
+            inter.append(int(y))
+    t_recv_un = time.perf_counter() - t0
+
+    nr, ns = len(receiver_ids), len(sender_ids)
+    return TPSIResult(
+        intersection=np.sort(np.asarray(sorted(inter), np.int64)),
+        bytes_to_sender=nr * mb,
+        bytes_to_receiver=nr * mb + ns * HASH_BYTES,
+        messages=3,
+        compute_seconds=t_recv_blind + t_send + t_recv_un,
+        sender_compute_seconds=t_send,
+        receiver_compute_seconds=t_recv_blind + t_recv_un,
+    )
+
+
+# ---------------------------------------------------------------- OPRF / OT
+
+def _oprf(seed_bytes: bytes, x: int) -> bytes:
+    return hashlib.sha256(seed_bytes + int(x).to_bytes(8, "little")).digest()
+
+
+def tpsi_oprf(sender_ids: Sequence[int], receiver_ids: Sequence[int], *,
+              seed: int | None = None) -> TPSIResult:
+    """OPRF(OT-extension)-style PSI (KKRT pattern). The RECEIVER learns the
+    intersection.
+
+    The receiver cuckoo-hashes its set (ONE OPRF evaluation per element via
+    OT extension), while the sender must ship ``CUCKOO_HASHES`` PRF
+    evaluations PER ELEMENT (one per hash function) — the O(h·|send|) term
+    that motivates the paper's "larger party should be the receiver" rule:
+    the sender's transmission dominates, so the smaller party should send.
+    """
+    OT_BYTES = 32            # per-receiver-element OT-extension traffic
+    CUCKOO_HASHES = 3        # sender PRF evaluations per element
+    rng = secrets.SystemRandom() if seed is None else __import__("random").Random(seed)
+    seed_bytes = rng.getrandbits(256).to_bytes(32, "little")
+
+    t0 = time.perf_counter()
+    recv_tags: Dict[bytes, int] = {_oprf(seed_bytes, y): int(y)
+                                   for y in receiver_ids}
+    t_recv = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    # sender evaluates the PRF under each cuckoo hash position; with a
+    # shared seed the matching tag is the position-0 one, the rest are
+    # decoys the receiver discards (cost-faithful, result-identical)
+    sender_tags = [_oprf(seed_bytes, x) for x in sender_ids]
+    _decoys = [_oprf(seed_bytes + bytes([h]), x)
+               for h in range(1, CUCKOO_HASHES) for x in sender_ids]
+    t_send = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    inter = sorted(recv_tags[t] for t in sender_tags if t in recv_tags)
+    t_match = time.perf_counter() - t0
+
+    nr, ns = len(receiver_ids), len(sender_ids)
+    return TPSIResult(
+        intersection=np.asarray(inter, np.int64),
+        bytes_to_sender=nr * OT_BYTES,                       # OT up-traffic
+        bytes_to_receiver=(nr * OT_BYTES
+                           + ns * CUCKOO_HASHES * HASH_BYTES),
+        messages=3,
+        compute_seconds=t_recv + t_send + t_match,
+        sender_compute_seconds=t_send,
+        receiver_compute_seconds=t_recv + t_match,
+    )
+
+
+PROTOCOLS = {"rsa": tpsi_rsa, "oprf": tpsi_oprf}
+
+# a module-level default key so benchmarks don't re-keygen per pair; tests
+# may pass their own. Generated lazily to keep import fast.
+_DEFAULT_RSA_KEY: RSAKey | None = None
+
+
+def default_rsa_key() -> RSAKey:
+    global _DEFAULT_RSA_KEY
+    if _DEFAULT_RSA_KEY is None:
+        _DEFAULT_RSA_KEY = rsa_keygen(512, seed=0xC0FFEE)
+    return _DEFAULT_RSA_KEY
+
+
+def run_tpsi(protocol: str, sender_ids, receiver_ids, **kw) -> TPSIResult:
+    if protocol == "rsa" and "key" not in kw:
+        kw["key"] = default_rsa_key()
+    return PROTOCOLS[protocol](sender_ids, receiver_ids, **kw)

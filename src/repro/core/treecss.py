@@ -1,0 +1,132 @@
+"""TreeCSS end-to-end pipeline (Fig. 1): align → coreset → weighted training.
+
+The four framework variants of Table 2 are combinations of
+  MPSI topology ∈ {star, tree(ours), path}  ×  data ∈ {ALL, CSS(ours)}:
+
+  STARALL  = Star-MPSI + full-data SplitNN        (vanilla VFL baseline)
+  TREEALL  = Tree-MPSI + full-data SplitNN
+  STARCSS  = Star-MPSI + Cluster-Coreset training
+  TREECSS  = Tree-MPSI + Cluster-Coreset training (the paper's framework)
+
+``run_pipeline`` measures/simulates each stage and returns a stage-by-stage
+report so benchmarks can reproduce the Table-2 time comparison.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.coreset import CoresetResult, cluster_coreset
+from repro.core.mpsi import MPSI, MPSIStats
+from repro.core.splitnn import (SplitNNConfig, TrainReport, evaluate,
+                                knn_predict, train_splitnn)
+from repro.data.synthetic import make_id_universe
+from repro.data.vertical import VerticalPartition
+
+
+@dataclasses.dataclass
+class PipelineReport:
+    variant: str
+    mpsi: MPSIStats
+    coreset: Optional[CoresetResult]
+    train: TrainReport
+    metric: float                  # accuracy (cls) or MSE (reg)
+    align_seconds: float
+    coreset_seconds: float
+    train_seconds: float
+    n_train: int
+
+    @property
+    def total_seconds(self) -> float:
+        return self.align_seconds + self.coreset_seconds + self.train_seconds
+
+
+def _align(partition: VerticalPartition, topology: str, *, overlap: float,
+           protocol: str, seed: int) -> Tuple[VerticalPartition, MPSIStats,
+                                              float]:
+    """Run MPSI over per-client ID sets and restrict data to the aligned set.
+
+    Each client's ID list covers the same underlying rows; ``overlap`` of
+    them are common (the paper's 70% synthetic setting maps row-indices to
+    IDs so alignment has real work to do)."""
+    n = partition.n_samples
+    m = partition.n_clients
+    sets, _core = make_id_universe(m, n, overlap, seed=seed)
+    # Deterministic row←id map: row i has id = sets[0][perm[i]] for the ids
+    # every client shares; MPSI returns the common subset.
+    t0 = time.perf_counter()
+    stats = MPSI[topology](sets, protocol=protocol)
+    align_secs = stats.simulated_seconds
+    _ = time.perf_counter() - t0
+    inter = stats.intersection
+    # map intersection ids -> rows: the shared core ids correspond to the
+    # first len(core) rows of every client's local ordering by construction
+    rows = np.arange(min(len(inter), n))
+    aligned = partition.take(rows)
+    return aligned, stats, align_secs
+
+
+def run_pipeline(train_part: VerticalPartition,
+                 test_part: VerticalPartition,
+                 cfg: SplitNNConfig, *,
+                 variant: str = "treecss",
+                 clusters_per_client: int = 12,
+                 overlap: float = 0.7,
+                 protocol: str = "rsa",
+                 use_weights: bool = True,
+                 kmeans_impl: str = "ref",
+                 seed: int = 0,
+                 knn_k: int = 5) -> PipelineReport:
+    variant = variant.lower()
+    topology = "tree" if variant.startswith("tree") else (
+        "path" if variant.startswith("path") else "star")
+    use_css = variant.endswith("css")
+
+    aligned, mpsi_stats, align_secs = _align(
+        train_part, topology, overlap=overlap, protocol=protocol, seed=seed)
+
+    coreset_res = None
+    weights = None
+    if use_css:
+        # warm the kmeans jit cache on the exact shapes so stage timing
+        # compares protocols, not XLA compilation (paid once per shape)
+        for f in aligned.client_features:
+            from repro.core.kmeans import kmeans as _km
+            _km(f, min(clusters_per_client, f.shape[0]), seed=seed,
+                impl=kmeans_impl)
+    if use_css:
+        coreset_res = cluster_coreset(
+            aligned, clusters_per_client, seed=seed, kmeans_impl=kmeans_impl)
+        train_data = aligned.take(coreset_res.indices)
+        if use_weights:
+            weights = coreset_res.weights
+        # steps 1-2 run concurrently on the clients: stage cost is the
+        # per-client makespan + label-owner selection (+ HE)
+        coreset_secs = coreset_res.makespan_seconds
+    else:
+        train_data = aligned
+        coreset_secs = 0.0
+
+    if cfg.model == "knn":
+        t0 = time.perf_counter()
+        pred = knn_predict(train_data, test_part, knn_k,
+                           sample_weights=weights)
+        train_secs = time.perf_counter() - t0
+        metric = float(np.mean(pred == test_part.labels))
+        train_report = TrainReport(losses=[], epochs=0, steps=0,
+                                   train_seconds=train_secs, comm_bytes=0,
+                                   simulated_comm_seconds=0.0, params=None)
+    else:
+        train_report = train_splitnn(train_data, cfg, sample_weights=weights)
+        train_secs = (train_report.train_seconds
+                      + train_report.simulated_comm_seconds)
+        metric = evaluate(train_report.params, cfg, test_part)
+
+    return PipelineReport(
+        variant=variant, mpsi=mpsi_stats, coreset=coreset_res,
+        train=train_report, metric=metric, align_seconds=align_secs,
+        coreset_seconds=coreset_secs, train_seconds=train_secs,
+        n_train=train_data.n_samples)

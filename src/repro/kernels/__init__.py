@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+  kmeans_assign   — fused K-Means distance+argmin (Cluster-Coreset hot loop)
+  flash_attention — online-softmax GQA attention (SplitNN LLM train/serve)
+  ssd_scan        — Mamba2 SSD chunked scan with VMEM-carried state
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+public wrapper, padding + layout), ref.py (pure-jnp oracle). Kernels run
+interpret=True on CPU (this container); set REPRO_PALLAS_INTERPRET=0 on
+real TPU hardware.
+"""

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the flash attention kernel.
+
+Delegates to the framework's full_attention (same math, O(S²) memory):
+GQA, causal, sliding window, always-visible prefix, logit softcap.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import full_attention
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    prefix: int = 0, logit_cap: float = 0.0):
+    """q (B,Sq,H,Dh), k/v (B,Sk,KV,Dh) -> (B,Sq,H,Dh)."""
+    sq, sk = q.shape[1], k.shape[1]
+    q_pos = jnp.arange(sq, dtype=jnp.int32) + (sk - sq)  # suffix alignment
+    k_pos = jnp.arange(sk, dtype=jnp.int32)
+    return full_attention(q, k, v, q_pos=q_pos, k_pos=k_pos, causal=causal,
+                          window=window, prefix=prefix, logit_cap=logit_cap)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the K-Means distance/assign step."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def kmeans_assign(points: jnp.ndarray, centroids: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """points (N,d) f32, centroids (K,d) f32 ->
+    (assign (N,) int32, sq_dist (N,) f32)."""
+    p = points.astype(jnp.float32)
+    c = centroids.astype(jnp.float32)
+    p2 = jnp.sum(jnp.square(p), axis=1, keepdims=True)        # (N,1)
+    c2 = jnp.sum(jnp.square(c), axis=1)[None]                 # (1,K)
+    d = p2 - 2.0 * (p @ c.T) + c2                             # (N,K)
+    d = jnp.maximum(d, 0.0)
+    return jnp.argmin(d, axis=1).astype(jnp.int32), jnp.min(d, axis=1)

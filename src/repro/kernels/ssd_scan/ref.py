@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the SSD (state-space duality) chunked scan.
+
+Delegates to the framework implementation in ``repro.models.ssm`` —
+the chunk-parallel decomposition of Mamba2's selective state update.
+"""
+from __future__ import annotations
+
+from repro.models.ssm import ssd_chunked
+
+
+def ssd_scan(x, dt, A, B, C, chunk: int):
+    """x (B,S,H,P) f32, dt (B,S,H) f32 softplus'ed, A (H,) negative,
+    B/C (B,S,N) f32 -> (y (B,S,H,P), final_state (B,H,P,N))."""
+    return ssd_chunked(x, dt, A, B, C, chunk)

@@ -1,0 +1,175 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST run before any jax import/init: the dry-run builds 16×16 and
+#   2×16×16 production meshes from 512 host placeholder devices.
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture × input shape × mesh): build abstract inputs +
+shardings, ``jax.jit(step).lower(...).compile()``, record
+``memory_analysis()`` / ``cost_analysis()`` / parsed collective bytes into
+``experiments/dryrun/<arch>__<shape>__<mesh>.json`` for §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+      --shape train_4k [--multi-pod] [--out experiments/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import json
+import time
+import traceback
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool,
+            out_dir: str = "experiments/dryrun",
+            save_hlo: bool = False, variant: str = "") -> dict:
+    import jax
+    from repro.analysis.hlo import collective_bytes, parse_hlo_collectives
+    from repro.analysis.hlo_cost import analyze_hlo
+    from repro.analysis.roofline import model_flops_for, roofline_terms
+    from repro.configs import INPUT_SHAPES, get_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import build_dryrun, supports
+    from repro.sharding import use_mesh
+
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    tag = f"{arch}__{shape_name}__{mesh_name}" + (f"__{variant}" if variant
+                                                  else "")
+    ok, why = supports(cfg, shape)
+    record: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                    "variant": variant or "baseline"}
+    if not ok:
+        record.update(status="skipped", reason=why)
+        _save(out_dir, tag, record)
+        print(f"[dryrun] SKIP {tag}: {why}")
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.perf_counter()
+    try:
+        with use_mesh(mesh):
+            fn, aargs, in_sh, out_sh = build_dryrun(cfg, shape, mesh)
+            jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+            lowered = jfn.lower(*aargs)
+            t_lower = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            compiled = lowered.compile()
+            t_compile = time.perf_counter() - t0
+
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+    except Exception as exc:  # noqa: BLE001 — record failure for the report
+        record.update(status="failed", error=f"{type(exc).__name__}: {exc}",
+                      traceback=traceback.format_exc()[-4000:])
+        _save(out_dir, tag, record)
+        print(f"[dryrun] FAIL {tag}: {exc}")
+        return record
+
+    colls = parse_hlo_collectives(hlo)
+    coll_bytes = collective_bytes(hlo)
+    # XLA's cost_analysis counts scan bodies ONCE — use our trip-count-aware
+    # HLO analyzer for the roofline; keep XLA's raw numbers for reference.
+    ours = analyze_hlo(hlo)
+    flops_dev = float(ours["flops"])
+    bytes_dev = float(ours["bytes"])
+    model_flops = model_flops_for(cfg, shape)
+    terms = roofline_terms(
+        flops_per_device=flops_dev, bytes_per_device=bytes_dev,
+        collective_bytes_per_device=coll_bytes,
+        model_flops_global=model_flops, chips=chips)
+
+    record.update(
+        status="ok",
+        chips=chips,
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        memory={
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": (getattr(mem, "temp_size_in_bytes", 0) or 0)
+            + (getattr(mem, "argument_size_in_bytes", 0) or 0),
+        },
+        cost={"flops_per_device": flops_dev,
+              "bytes_per_device": bytes_dev,
+              "xla_flops_raw": float(cost.get("flops", 0.0)),
+              "xla_bytes_raw": float(cost.get("bytes accessed", 0.0))},
+        collectives=colls,
+        collective_bytes_per_device=coll_bytes,
+        roofline=terms,
+        hlo_bytes=len(hlo),
+    )
+    if save_hlo:
+        import os as _os
+        _os.makedirs(f"{out_dir}/hlo", exist_ok=True)
+        with open(f"{out_dir}/hlo/{tag}.txt", "w") as f:
+            f.write(hlo)
+        record["hlo_path"] = f"{out_dir}/hlo/{tag}.txt"
+    _save(out_dir, tag, record)
+    hbm_gb = (record["memory"]["peak_bytes"] or 0) / 2 ** 30
+    print(f"[dryrun] OK {tag}: compile={t_compile:.1f}s "
+          f"flops/dev={flops_dev:.3e} bytes/dev={bytes_dev:.3e} "
+          f"coll/dev={coll_bytes:.3e}B peak≈{hbm_gb:.2f}GiB "
+          f"dominant={terms['dominant']}")
+    return record
+
+
+def _save(out_dir: str, tag: str, record: dict) -> None:
+    import os as _os
+    _os.makedirs(out_dir, exist_ok=True)
+    with open(f"{out_dir}/{tag}.json", "w") as f:
+        json.dump(record, f, indent=1, default=str)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--variant", default="",
+                    help="perf-iteration tag for §Perf records")
+    ap.add_argument("--skip-existing", action="store_true",
+                    help="skip combos whose record is already status=ok")
+    ap.add_argument("--reverse", action="store_true",
+                    help="reverse arch order (light archs first)")
+    args = ap.parse_args()
+
+    from repro.configs import ARCH_IDS, INPUT_SHAPES
+    if args.all:
+        n_fail = 0
+        mesh_name = "pod2x16x16" if args.multi_pod else "pod16x16"
+        arch_list = list(reversed(ARCH_IDS)) if args.reverse else ARCH_IDS
+        for arch in arch_list:
+            for shape in INPUT_SHAPES:  # noqa: B007
+                if args.skip_existing:
+                    tag = f"{arch}__{shape}__{mesh_name}" + (
+                        f"__{args.variant}" if args.variant else "")
+                    try:
+                        with open(f"{args.out}/{tag}.json") as f:
+                            if json.load(f).get("status") in ("ok",
+                                                              "skipped"):
+                                print(f"[dryrun] CACHED {tag}")
+                                continue
+                    except FileNotFoundError:
+                        pass
+                rec = run_one(arch, shape, multi_pod=args.multi_pod,
+                              out_dir=args.out, save_hlo=args.save_hlo,
+                              variant=args.variant)
+                n_fail += rec.get("status") == "failed"
+        raise SystemExit(1 if n_fail else 0)
+    rec = run_one(args.arch, args.shape, multi_pod=args.multi_pod,
+                  out_dir=args.out, save_hlo=args.save_hlo,
+                  variant=args.variant)
+    raise SystemExit(1 if rec.get("status") == "failed" else 0)
+
+
+if __name__ == "__main__":
+    main()

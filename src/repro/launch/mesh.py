@@ -1,0 +1,22 @@
+"""Production mesh definitions (TPU v5e pods).
+
+single pod : (16, 16)    axes ("data", "model")          — 256 chips
+multi-pod  : (2, 16, 16) axes ("pod", "data", "model")   — 512 chips
+
+Functions (not module constants) so importing never touches jax device
+state — the dry-run sets XLA_FLAGS before first jax init.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1-device mesh for CPU smoke tests (same axis names as production)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

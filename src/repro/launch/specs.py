@@ -1,0 +1,238 @@
+"""Per-(arch × shape) dry-run targets: abstract inputs + shardings + step fn.
+
+``build_dryrun(cfg, shape, mesh)`` returns (fn, abstract_args,
+in_shardings, out_shardings) ready for
+``jax.jit(fn, ...).lower(*abstract_args).compile()`` — ShapeDtypeStruct
+stand-ins only, no device allocation.
+
+Shape semantics (assignment):
+  train_4k     → train_step (fwd+bwd+Adam) on (B, S) tokens
+  prefill_32k  → prefill: full prompt forward + cache build, last-token logits
+  decode_32k   → serve_step: ONE token against a seq_len KV cache
+  long_500k    → serve_step at 524288 context — sub-quadratic archs only
+                 (ssm/hybrid state caches, windowed dense ring caches)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import api, encdec, transformer
+from repro.models.layers import dtype_of
+from repro.sharding import (check_divisible, dp_spec, filter_spec,
+                            param_specs_abstract, replicated)
+from repro.train.optimizer import AdamState
+from repro.train.steps import make_train_step
+
+LONG_CONTEXT_OK = ("mamba2-1.3b", "hymba-1.5b", "gemma2-9b")
+
+
+def supports(cfg: ArchConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether this (arch, shape) combination runs (DESIGN.md §4)."""
+    if shape.name == "long_500k" and cfg.arch_id not in LONG_CONTEXT_OK:
+        return False, ("pure full attention (or ≤448-token decoder): no "
+                       "sub-quadratic 500k decode in the source family")
+    return True, ""
+
+
+# ----------------------------------------------------------- abstract inputs
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig, *, with_labels: bool
+                ) -> Dict[str, jax.ShapeDtypeStruct]:
+    b, s = shape.global_batch, shape.seq_len
+    out = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if with_labels:
+        out["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        out["weights"] = jax.ShapeDtypeStruct((b,), jnp.float32)
+    if cfg.family == "audio":
+        out["frames"] = jax.ShapeDtypeStruct((b, cfg.enc_seq, cfg.d_model),
+                                             jnp.float32)
+    if cfg.family == "vlm":
+        out["patches"] = jax.ShapeDtypeStruct((b, cfg.vision_tokens,
+                                               cfg.d_model), jnp.float32)
+    return out
+
+
+def abstract_params(cfg: ArchConfig):
+    return jax.eval_shape(
+        functools.partial(api.init_params, cfg=cfg), jax.random.PRNGKey(0))
+
+
+def abstract_opt(aparams):
+    zeros = jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), aparams)
+    return AdamState(step=jax.ShapeDtypeStruct((), jnp.int32), mu=zeros,
+                     nu=jax.tree_util.tree_map(lambda z: z, zeros))
+
+
+def batch_shardings_abstract(abatch, mesh):
+    dp = dp_spec(mesh)
+
+    def one(leaf):
+        nd = len(leaf.shape)
+        spec = P(dp, *([None] * (nd - 1))) if nd else P()
+        spec = check_divisible(spec, leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map(one, abatch)
+
+
+# -------------------------------------------------------------- cache specs
+
+def _cache_spec_tree(acaches, mesh, cfg: ArchConfig, *, scanned: bool):
+    """KV caches: batch→dp; kv-heads→model when divisible, else seq→model.
+    SSM states: batch→dp, heads→model when divisible. ``scanned`` caches
+    carry a leading stacked-layer axis (never sharded)."""
+    dp = dp_spec(mesh)
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    msize = axes.get("model", 1)
+
+    def one(path, leaf):
+        names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        shape = leaf.shape
+        nd = len(shape)
+        last = names[-1] if names else ""
+        if last == "pos":                        # (cap,) bookkeeping
+            return NamedSharding(mesh, P(*([None] * nd)))
+        entries = [None] * nd
+        bdim = 1 if scanned else 0               # (L, B, ...) vs (B, ...)
+        if nd > bdim:
+            entries[bdim] = dp if dp else None
+        if last in ("k", "v", "cross_k", "cross_v"):
+            # (..., B, S, KV, Dh)
+            kv_dim, s_dim = nd - 2, nd - 3
+            if shape[kv_dim] % msize == 0:
+                entries[kv_dim] = "model"
+            elif shape[s_dim] % msize == 0:
+                entries[s_dim] = "model"
+        elif last == "state":
+            # (..., B, H, P, N)
+            h_dim = nd - 3
+            if shape[h_dim] % msize == 0:
+                entries[h_dim] = "model"
+        elif last == "conv":
+            # (..., B, W-1, di)
+            if shape[nd - 1] % msize == 0:
+                entries[nd - 1] = "model"
+        spec = check_divisible(P(*entries), shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, acaches)
+
+
+# ------------------------------------------------------------- step builders
+
+def build_train(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    aparams = abstract_params(cfg)
+    aopt = abstract_opt(aparams)
+    abatch = batch_specs(cfg, shape, with_labels=True)
+
+    p_shard = param_specs_abstract(aparams, mesh)
+    opt_shard = AdamState(step=replicated(mesh), mu=p_shard,
+                          nu=jax.tree_util.tree_map(lambda s: s, p_shard))
+    b_shard = batch_shardings_abstract(abatch, mesh)
+
+    # MoE archs unroll the layer loop: XLA hoists loop-invariant FSDP
+    # all-gathers out of scans, which would materialize the full stacked
+    # expert tensor (see DESIGN.md §5). REPRO_REMAT=0 disables activation
+    # checkpointing (§Perf: profitable once per-device activations are
+    # small, e.g. under the fsdp profile).
+    import os as _os
+    attn_impl = _os.environ.get(
+        "REPRO_ATTN_IMPL",
+        "chunked" if shape.seq_len >= 8192 else "auto")
+    step = make_train_step(cfg, lr=1e-4,
+                           remat=_os.environ.get("REPRO_REMAT", "1") != "0",
+                           attn_impl=attn_impl,
+                           unroll=cfg.moe is not None)
+    in_shardings = (p_shard, opt_shard, b_shard)
+    out_shardings = (p_shard, opt_shard, None)
+    return step, (aparams, aopt, abatch), in_shardings, out_shardings
+
+
+def build_prefill(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    aparams = abstract_params(cfg)
+    abatch = batch_specs(cfg, shape, with_labels=False)
+    p_shard = param_specs_abstract(aparams, mesh)
+    b_shard = batch_shardings_abstract(abatch, mesh)
+
+    if cfg.family == "audio":
+        def fn(params, batch):
+            return encdec.forward_encdec(params, cfg, batch["tokens"],
+                                         batch["frames"], last_only=True)
+    elif transformer.uniform_decode(cfg):
+        # layer-scanned prefill: compact HLO for 40-80-layer dense archs
+        def fn(params, batch):
+            return transformer.prefill_scanned(
+                params, cfg, batch["tokens"],
+                api.extra_embeds_of(cfg, batch),
+                context_len=shape.seq_len + 1, attn_impl="chunked",
+                last_only=True)
+    else:
+        def fn(params, batch):
+            logits, caches, idx = transformer.prefill(
+                params, cfg, batch["tokens"],
+                api.extra_embeds_of(cfg, batch),
+                context_len=shape.seq_len + 1, attn_impl="chunked",
+                last_only=True)
+            return logits, caches, idx
+
+    return fn, (aparams, abatch), (p_shard, b_shard), None
+
+
+def build_decode(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    aparams = abstract_params(cfg)
+    b, ctx = shape.global_batch, shape.seq_len
+    force_window = shape.name == "long_500k" and cfg.family != "ssm"
+    p_shard = param_specs_abstract(aparams, mesh)
+    dp = dp_spec(mesh)
+
+    tok = jax.ShapeDtypeStruct((b,), jnp.int32)
+    idx = jax.ShapeDtypeStruct((), jnp.int32)
+    tok_shard = NamedSharding(
+        mesh, check_divisible(P(dp if dp else None), (b,), mesh))
+    idx_shard = replicated(mesh)
+
+    if cfg.family == "audio":
+        amem = jax.ShapeDtypeStruct((b, cfg.enc_seq, cfg.d_model),
+                                    dtype_of(cfg.dtype))
+        acaches = jax.eval_shape(
+            lambda p, mm: encdec.init_decode_state(p, cfg, b, ctx, mm),
+            aparams, amem)
+
+        def fn(params, caches, cur_index, token):
+            return encdec.decode_step(params, cfg, caches, cur_index, token)
+    elif transformer.uniform_decode(cfg):
+        acaches = jax.eval_shape(
+            lambda: transformer.init_decode_state_scanned(cfg, b, ctx))
+
+        def fn(params, caches, cur_index, token):
+            return transformer.decode_step_scanned(params, cfg, caches,
+                                                   cur_index, token)
+    else:
+        acaches = jax.eval_shape(
+            lambda: transformer.init_decode_state(
+                cfg, b, ctx, force_window=force_window))
+
+        def fn(params, caches, cur_index, token):
+            return transformer.decode_step(params, cfg, caches, cur_index,
+                                           token, force_window=force_window)
+
+    c_shard = _cache_spec_tree(
+        acaches, mesh, cfg,
+        scanned=(cfg.family != "audio" and transformer.uniform_decode(cfg)))
+    in_sh = (p_shard, c_shard, idx_shard, tok_shard)
+    out_sh = (None, c_shard)
+    return fn, (aparams, acaches, idx, tok), in_sh, out_sh
+
+
+def build_dryrun(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    if shape.kind == "train":
+        return build_train(cfg, shape, mesh)
+    if shape.kind == "prefill":
+        return build_prefill(cfg, shape, mesh)
+    return build_decode(cfg, shape, mesh)

@@ -1,0 +1,68 @@
+"""Unified model API over all assigned architecture families.
+
+``init_params(key, cfg)``, ``forward(params, cfg, batch)``,
+``init_serve_state(...)`` / ``serve_decode_step(...)`` dispatch on
+``cfg.family`` so the launcher, dry-run, smoke tests, and the VFL SplitNN
+top-model wrapper all talk to one interface.
+
+Batch dict keys:
+  tokens  (B,S) int32           — always present
+  labels  (B,S) int32           — train
+  weights (B,) f32              — optional TreeCSS coreset sample weights
+  frames  (B,enc_seq,D)         — audio stub embeddings (whisper)
+  patches (B,vision_tokens,Dv)  — vlm stub patch embeddings (internvl)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec, transformer
+
+
+def init_params(key, cfg: ArchConfig):
+    if cfg.family == "audio":
+        return encdec.init_encdec(key, cfg)
+    return transformer.init_lm(key, cfg)
+
+
+def extra_embeds_of(cfg: ArchConfig, batch: Dict[str, Any]):
+    if cfg.family == "vlm":
+        return batch["patches"]
+    return None
+
+
+def forward(params, cfg: ArchConfig, batch: Dict[str, Any], *,
+            remat: bool = True, attn_impl: str = "auto",
+            unroll: bool = False):
+    """Full-sequence forward -> (logits, aux_loss, n_prefix)."""
+    if cfg.family == "audio":
+        logits = encdec.forward_encdec(params, cfg, batch["tokens"],
+                                       batch["frames"])
+        return logits, jnp.zeros((), jnp.float32), 0
+    return transformer.forward_lm(
+        params, cfg, batch["tokens"], extra_embeds_of(cfg, batch),
+        remat=remat, attn_impl=attn_impl, unroll=unroll)
+
+
+# ------------------------------------------------------------------ serving
+
+def init_serve_state(params, cfg: ArchConfig, batch: int, context_len: int,
+                     *, memory=None, force_window: bool = False):
+    if cfg.family == "audio":
+        assert memory is not None, "whisper decode needs encoder memory"
+        return encdec.init_decode_state(params, cfg, batch, context_len,
+                                        memory)
+    return transformer.init_decode_state(cfg, batch, context_len,
+                                         force_window=force_window)
+
+
+def serve_decode_step(params, cfg: ArchConfig, caches, cur_index, token, *,
+                      force_window: bool = False):
+    if cfg.family == "audio":
+        return encdec.decode_step(params, cfg, caches, cur_index, token)
+    return transformer.decode_step(params, cfg, caches, cur_index, token,
+                                   force_window=force_window)

@@ -1,0 +1,259 @@
+"""GQA attention: full / chunked(online-softmax) / decode-with-KV-cache.
+
+Supports sliding windows (ring-buffer caches), always-visible prefixes
+(hymba meta tokens), attention logit softcapping (gemma2), optional rotary,
+and cross-attention (whisper). The chunked path is the pure-jnp analogue of
+the Pallas flash kernel in ``repro.kernels.flash_attention`` (same math) and
+keeps peak memory O(q_block × k_block) instead of O(S²).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rotary_embed, softcap
+
+NEG_INF = -1e30
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int,
+                   head_dim: int, dtype, use_bias: bool = False):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d_model, (n_heads, head_dim), dtype),
+        "wk": dense_init(ks[1], d_model, (n_kv_heads, head_dim), dtype),
+        "wv": dense_init(ks[2], d_model, (n_kv_heads, head_dim), dtype),
+        "wo": dense_init(ks[3], n_heads * head_dim, d_model, dtype),
+    }
+    if use_bias:
+        p["bq"] = jnp.zeros((n_heads, head_dim), dtype)
+        p["bk"] = jnp.zeros((n_kv_heads, head_dim), dtype)
+        p["bv"] = jnp.zeros((n_kv_heads, head_dim), dtype)
+    return p
+
+
+def qkv_project(params, x, kv_x=None):
+    """x: (B,S,D) -> q (B,S,H,Dh), k/v (B,Skv,KV,Dh)."""
+    kv_x = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", kv_x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", kv_x, params["wv"].astype(x.dtype))
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    return q, k, v
+
+
+def out_project(params, attn_out):
+    """attn_out: (B,S,H,Dh) -> (B,S,D)."""
+    b, s, h, dh = attn_out.shape
+    return attn_out.reshape(b, s, h * dh) @ params["wo"].astype(attn_out.dtype)
+
+
+def _mask(q_pos, k_pos, *, causal: bool, window, prefix):
+    """q_pos: (Sq,), k_pos: (Sk,) -> bool (Sq, Sk) of visible entries.
+
+    ``window``/``prefix`` may be Python ints or traced scalars (layer-scanned
+    metadata); window==0 means full attention.
+    """
+    qp = q_pos[:, None]
+    kp = k_pos[None, :]
+    ok = kp >= 0
+    if causal:
+        ok &= kp <= qp
+    win = jnp.asarray(window, jnp.int32)
+    eff = jnp.where(win > 0, win, jnp.int32(2 ** 30))
+    pref = jnp.asarray(prefix, jnp.int32)
+    ok &= ((qp - kp) < eff) | (kp < pref)
+    return ok
+
+
+def _gqa_scores(q, k, scale, cap):
+    """q: (B,Sq,KV,G,Dh), k: (B,Sk,KV,Dh) -> (B,KV,G,Sq,Sk) f32."""
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q, k).astype(jnp.float32) * scale
+    return softcap(s, cap)
+
+
+def full_attention(q, k, v, *, q_pos, k_pos, causal=True, window=0, prefix=0,
+                   logit_cap=0.0):
+    """Naive O(S²) attention. q: (B,Sq,H,Dh), k/v: (B,Sk,KV,Dh)."""
+    b, sq, h, dh = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    scale = dh ** -0.5
+    qg = q.reshape(b, sq, kv, g, dh)
+    scores = _gqa_scores(qg, k, scale, logit_cap)  # (B,KV,G,Sq,Sk)
+    mask = _mask(q_pos, k_pos, causal=causal, window=window, prefix=prefix)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v)
+    return out.reshape(b, sq, h, dh)
+
+
+def chunked_attention(q, k, v, *, q_pos, k_pos, causal=True, window=0,
+                      prefix=0, logit_cap=0.0, q_block=512, k_block=1024):
+    """Online-softmax blocked attention; peak memory O(q_block × k_block).
+
+    Same math as full_attention; this is the jnp oracle of the Pallas flash
+    kernel and the default for seq >= 8192.
+    """
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    kvh = k.shape[2]
+    g = h // kvh
+    scale = dh ** -0.5
+    # shrink blocks to divisors (meta/vision prefixes make ragged lengths)
+    q_block = min(q_block, sq)
+    while sq % q_block:
+        q_block //= 2
+    k_block = min(k_block, sk)
+    while sk % k_block:
+        k_block //= 2
+    q_block, k_block = max(q_block, 1), max(k_block, 1)
+    nq, nk = sq // q_block, sk // k_block
+
+    qg = q.reshape(b, nq, q_block, kvh, g, dh)
+    kb = k.reshape(b, nk, k_block, kvh, dh)
+    vb = v.reshape(b, nk, k_block, kvh, dh)
+    qpb = q_pos.reshape(nq, q_block)
+    kpb = k_pos.reshape(nk, k_block)
+
+    def one_q_block(args):
+        qi, qp = args  # (B,qb,KV,G,Dh), (qb,)
+
+        def body(carry, inp):
+            m, l, acc = carry
+            ki, vi, kp = inp  # (B,kb,KV,Dh), (B,kb,KV,Dh), (kb,)
+            s = _gqa_scores(qi, ki, scale, logit_cap)  # (B,KV,G,qb,kb)
+            msk = _mask(qp, kp, causal=causal, window=window, prefix=prefix)
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(vi.dtype), vi)
+            acc_new = acc * corr[..., None].astype(acc.dtype) + pv.astype(acc.dtype)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kvh, g, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, q_block), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, q_block, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, a0),
+            (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), kpb))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.einsum("bkgqd->bqkgd", out)  # (B,qb,KV,G,Dh)
+
+    outs = jax.lax.map(one_q_block, (jnp.moveaxis(qg, 1, 0), qpb))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, dh)
+    return out.astype(q.dtype)
+
+
+def attend(q, k, v, *, q_pos, k_pos, causal=True, window=0, prefix=0,
+           logit_cap=0.0, impl="auto"):
+    if impl == "auto":
+        impl = "chunked" if (q.shape[1] >= 8192 or k.shape[1] >= 8192) else "full"
+    if impl == "flash":
+        # Pallas TPU kernel (interpret-mode on CPU). Assumes standard
+        # suffix-aligned contiguous positions, which all call sites use.
+        from repro.kernels.flash_attention import ops as fa_ops
+        return fa_ops.flash_attention(
+            q, k, v, causal=causal, window=int(window), prefix=int(prefix),
+            logit_cap=float(logit_cap))
+    fn = {"full": full_attention, "chunked": chunked_attention}[impl]
+    return fn(q, k, v, q_pos=q_pos, k_pos=k_pos, causal=causal, window=window,
+              prefix=prefix, logit_cap=logit_cap)
+
+
+# ----------------------------------------------------------------- KV caches
+
+def init_cache(batch: int, capacity: int, n_kv_heads: int, head_dim: int,
+               dtype):
+    """Ring-buffer KV cache. ``pos[c]`` holds the absolute position stored in
+    slot c (or -1)."""
+    return {
+        "k": jnp.zeros((batch, capacity, n_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, capacity, n_kv_heads, head_dim), dtype),
+        "pos": jnp.full((capacity,), -1, jnp.int32),
+    }
+
+
+def cache_slot(cur_index, capacity: int, window: int, prefix: int):
+    """Slot for absolute position cur_index. Full caches: identity. Windowed:
+    first ``prefix`` slots are pinned, the rest is a ring."""
+    if window and capacity < 10 ** 9:
+        ring = capacity - prefix
+        return jnp.where(
+            cur_index < prefix, cur_index,
+            prefix + (cur_index - prefix) % jnp.maximum(ring, 1))
+    return cur_index
+
+
+def cache_update(cache, k_new, v_new, cur_index, *, window=0, prefix=0):
+    """Insert one step (B,1,KV,Dh) at absolute position cur_index."""
+    cap = cache["k"].shape[1]
+    slot = cache_slot(cur_index, cap, window, prefix)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=1)
+    pos = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], cur_index[None].astype(jnp.int32), slot, axis=0)
+    return {"k": k, "v": v, "pos": pos}
+
+
+def cache_fill(cache, k, v, *, window=0, prefix=0):
+    """Bulk-fill a cache from full-sequence K/V (B,S,KV,Dh) after prefill.
+
+    For windowed ring caches only the last ``capacity - prefix`` positions
+    (plus the pinned prefix) are kept; slot mapping matches cache_slot().
+    """
+    cap = cache["k"].shape[1]
+    s = k.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    if window and s > cap:
+        ring = cap - prefix
+        keep_pref = jnp.arange(prefix, dtype=jnp.int32)
+        keep_ring = jnp.arange(s - ring, s, dtype=jnp.int32)
+        keep = jnp.concatenate([keep_pref, keep_ring])      # (cap,)
+        slots = cache_slot(keep, cap, window, prefix)
+        k_sel = jnp.take(k, keep, axis=1)
+        v_sel = jnp.take(v, keep, axis=1)
+        new_k = cache["k"].at[:, slots].set(k_sel)
+        new_v = cache["v"].at[:, slots].set(v_sel)
+        new_pos = cache["pos"].at[slots].set(keep)
+        return {"k": new_k, "v": new_v, "pos": new_pos}
+    # full cache (or prompt shorter than capacity): positions are slots
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, axis=1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, axis=1)
+    new_pos = jax.lax.dynamic_update_slice_in_dim(cache["pos"], positions, 0,
+                                                  axis=0)
+    return {"k": new_k, "v": new_v, "pos": new_pos}
+
+
+def decode_attention(params_free_q, cache, cur_index, *, window=0, prefix=0,
+                     logit_cap=0.0):
+    """One-token attention against the cache.
+
+    params_free_q: q (B,1,H,Dh). Returns (B,1,H,Dh).
+    """
+    q = params_free_q
+    b, one, h, dh = q.shape
+    k, v, pos = cache["k"], cache["v"], cache["pos"]
+    kvh = k.shape[2]
+    g = h // kvh
+    scale = dh ** -0.5
+    qg = q.reshape(b, one, kvh, g, dh)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32) * scale
+    s = softcap(s, logit_cap)
+    ok = (pos >= 0) & (pos <= cur_index)
+    if window:
+        in_w = (cur_index - pos) < window
+        in_w |= pos < prefix
+        ok &= in_w
+    s = jnp.where(ok[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v)
+    return out.reshape(b, one, h, dh)

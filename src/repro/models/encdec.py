@@ -1,0 +1,221 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+The mel-spectrogram + conv frontend is a STUB per the assignment carve-out:
+callers provide precomputed frame embeddings ``(B, enc_seq, d_model)``. We
+implement the transformer backbone: a bidirectional encoder over the frames
+and a causal decoder with cross-attention to the encoder memory.
+
+Whisper uses LayerNorm (not RMSNorm), GELU MLPs (not GLU), learned absolute
+positions in the decoder and sinusoidal positions in the encoder, and biases
+on q/v but not k — we keep qkv_bias uniform per the config for simplicity
+(noted in DESIGN.md as a fidelity simplification that does not change shapes
+or FLOPs).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_mod
+from repro.models.layers import (dense_init, dtype_of, embed_init,
+                                 gelu_mlp, init_gelu_mlp, init_layernorm,
+                                 layernorm, sinusoidal_positions)
+from repro.sharding import DP, shard_act
+
+
+# ------------------------------------------------------------------- init
+
+def init_enc_layer(key, cfg: ArchConfig):
+    dt = dtype_of(cfg.param_dtype)
+    d = cfg.d_model
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": init_layernorm(d),
+        "attn": attn_mod.init_attention(k1, d, cfg.n_heads, cfg.n_kv_heads,
+                                        cfg.resolved_head_dim, dt,
+                                        use_bias=cfg.qkv_bias),
+        "mlp_norm": init_layernorm(d),
+        "mlp": init_gelu_mlp(k2, d, cfg.d_ff, dt),
+    }
+
+
+def init_dec_layer(key, cfg: ArchConfig):
+    dt = dtype_of(cfg.param_dtype)
+    d = cfg.d_model
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "attn_norm": init_layernorm(d),
+        "attn": attn_mod.init_attention(k1, d, cfg.n_heads, cfg.n_kv_heads,
+                                        cfg.resolved_head_dim, dt,
+                                        use_bias=cfg.qkv_bias),
+        "cross_norm": init_layernorm(d),
+        "cross_attn": attn_mod.init_attention(k2, d, cfg.n_heads,
+                                              cfg.n_kv_heads,
+                                              cfg.resolved_head_dim, dt,
+                                              use_bias=cfg.qkv_bias),
+        "mlp_norm": init_layernorm(d),
+        "mlp": init_gelu_mlp(k3, d, cfg.d_ff, dt),
+    }
+
+
+def init_encdec(key, cfg: ArchConfig):
+    from repro.models.layers import stacked
+    dt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "embed": embed_init(ks[0], cfg.vocab_padded, cfg.d_model, dt),
+        # sized for the assignment's 32k prefill/decode shapes (the source
+        # model caps at 448 decoder positions; the backbone itself is
+        # position-table-bound only)
+        "dec_pos_embed": (jax.random.normal(
+            ks[3], (40960, cfg.d_model), jnp.float32) * 0.01).astype(dt),
+        "enc_layers": stacked(init_enc_layer, ks[1], cfg.enc_layers, cfg),
+        "enc_final_norm": init_layernorm(cfg.d_model),
+        "dec_layers": stacked(init_dec_layer, ks[2], cfg.n_layers, cfg),
+        "dec_final_norm": init_layernorm(cfg.d_model),
+        # lm head tied to embed (whisper ties)
+    }
+
+
+# ----------------------------------------------------------------- encoder
+
+def encode(params, cfg: ArchConfig, frames):
+    """frames: (B, S_enc, D) stub frontend embeddings -> encoder memory."""
+    dt = dtype_of(cfg.dtype)
+    eps = cfg.norm_eps
+    s = frames.shape[1]
+    pos_tab = jnp.asarray(sinusoidal_positions(s, cfg.d_model), dt)
+    x = frames.astype(dt) + pos_tab[None]
+    x = shard_act(x, DP, None, "model")
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    def body(carry, lp):
+        h = layernorm(lp["attn_norm"], carry, eps)
+        q, k, v = attn_mod.qkv_project(lp["attn"], h)
+        a = attn_mod.attend(q, k, v, q_pos=positions, k_pos=positions,
+                            causal=False, impl="full" if s < 8192 else "chunked")
+        carry = carry + attn_mod.out_project(lp["attn"], a)
+        h2 = layernorm(lp["mlp_norm"], carry, eps)
+        carry = carry + gelu_mlp(lp["mlp"], h2)
+        return shard_act(carry, DP, None, "model"), None
+
+    body_ck = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body_ck, x, params["enc_layers"])
+    return layernorm(params["enc_final_norm"], x, eps)
+
+
+# ----------------------------------------------------------------- decoder
+
+def _dec_block(lp, x, memory, cfg: ArchConfig, positions, mem_positions, eps):
+    h = layernorm(lp["attn_norm"], x, eps)
+    q, k, v = attn_mod.qkv_project(lp["attn"], h)
+    a = attn_mod.attend(q, k, v, q_pos=positions, k_pos=positions,
+                        causal=True)
+    x = x + attn_mod.out_project(lp["attn"], a)
+    hc = layernorm(lp["cross_norm"], x, eps)
+    qc, kc, vc = attn_mod.qkv_project(lp["cross_attn"], hc, kv_x=memory)
+    c = attn_mod.attend(qc, kc, vc, q_pos=positions, k_pos=mem_positions,
+                        causal=False)
+    x = x + attn_mod.out_project(lp["cross_attn"], c)
+    h2 = layernorm(lp["mlp_norm"], x, eps)
+    x = x + gelu_mlp(lp["mlp"], h2)
+    return shard_act(x, DP, None, "model")
+
+
+def decode_train(params, cfg: ArchConfig, tokens, memory, *,
+                 last_only: bool = False):
+    """Teacher-forced decoder pass. tokens (B,S) -> logits (B,S,Vp)."""
+    dt = dtype_of(cfg.dtype)
+    eps = cfg.norm_eps
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    x = x + params["dec_pos_embed"][None, :s].astype(dt)
+    x = shard_act(x, DP, None, "model")
+    positions = jnp.arange(s, dtype=jnp.int32)
+    mem_positions = jnp.arange(memory.shape[1], dtype=jnp.int32)
+
+    def body(carry, lp):
+        return (_dec_block(lp, carry, memory, cfg, positions, mem_positions,
+                           eps), None)
+
+    body_ck = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body_ck, x, params["dec_layers"])
+    if last_only:
+        x = x[:, -1:]
+    x = layernorm(params["dec_final_norm"], x, eps)
+    logits = x @ params["embed"].T.astype(x.dtype)
+    return shard_act(logits.astype(jnp.float32), DP, None, "model")
+
+
+def forward_encdec(params, cfg: ArchConfig, tokens, frames, *,
+                   last_only: bool = False):
+    """Full enc-dec forward: (dec tokens, enc frames) -> logits."""
+    memory = encode(params, cfg, frames)
+    return decode_train(params, cfg, tokens, memory, last_only=last_only)
+
+
+# ------------------------------------------------------------------ decode
+
+def _layer_params(stacked_params, i: int):
+    return jax.tree_util.tree_map(lambda p: p[i], stacked_params)
+
+
+def init_decode_state(params, cfg: ArchConfig, batch: int, context_len: int,
+                      memory):
+    """Caches: per-layer self-attn KV cache + precomputed cross K/V."""
+    dt = dtype_of(cfg.dtype)
+    caches: List[Dict[str, Any]] = []
+    for i in range(cfg.n_layers):
+        lp = _layer_params(params["dec_layers"], i)
+        _, kc, vc = attn_mod.qkv_project(
+            lp["cross_attn"], memory[:, :1].astype(dt), kv_x=memory.astype(dt))
+        caches.append({
+            "attn": attn_mod.init_cache(batch, context_len, cfg.n_kv_heads,
+                                        cfg.resolved_head_dim, dt),
+            "cross_k": kc, "cross_v": vc,
+        })
+    return caches
+
+
+def decode_step(params, cfg: ArchConfig, caches, cur_index, token):
+    """One decoder token with KV cache + fixed cross memory."""
+    dt = dtype_of(cfg.dtype)
+    eps = cfg.norm_eps
+    x = jnp.take(params["embed"], token, axis=0)[:, None].astype(dt)
+    pos_emb = jax.lax.dynamic_slice_in_dim(
+        params["dec_pos_embed"], cur_index, 1, axis=0)
+    x = x + pos_emb[None].astype(dt)
+    x = shard_act(x, DP, None, "model")
+    new_caches = []
+    mem_positions = None
+    for i in range(cfg.n_layers):
+        lp = _layer_params(params["dec_layers"], i)
+        cache = caches[i]
+        entry = dict(cache)
+        h = layernorm(lp["attn_norm"], x, eps)
+        q, k, v = attn_mod.qkv_project(lp["attn"], h)
+        entry["attn"] = attn_mod.cache_update(cache["attn"], k, v, cur_index)
+        a = attn_mod.decode_attention(q, entry["attn"], cur_index)
+        x = x + attn_mod.out_project(lp["attn"], a)
+        # cross attention against fixed memory
+        hc = layernorm(lp["cross_norm"], x, eps)
+        qc = jnp.einsum("bsd,dhk->bshk", hc,
+                        lp["cross_attn"]["wq"].astype(hc.dtype))
+        if "bq" in lp["cross_attn"]:
+            qc = qc + lp["cross_attn"]["bq"].astype(hc.dtype)
+        kc, vc = cache["cross_k"], cache["cross_v"]
+        if mem_positions is None:
+            mem_positions = jnp.arange(kc.shape[1], dtype=jnp.int32)
+        c = attn_mod.attend(qc, kc, vc, q_pos=jnp.zeros((1,), jnp.int32),
+                            k_pos=mem_positions, causal=False)
+        x = x + attn_mod.out_project(lp["cross_attn"], c)
+        h2 = layernorm(lp["mlp_norm"], x, eps)
+        x = x + gelu_mlp(lp["mlp"], h2)
+        x = shard_act(x, DP, None, "model")
+        new_caches.append(entry)
+    x = layernorm(params["dec_final_norm"], x, eps)
+    logits = (x @ params["embed"].T.astype(x.dtype))[:, 0]
+    return logits.astype(jnp.float32), new_caches

@@ -1,0 +1,138 @@
+"""Shared model primitives: norms, rotary, MLPs, embeddings, init helpers.
+
+Pure-functional pure-JAX (no flax): params are nested dicts of jnp arrays,
+every module is an ``init_*(key, ...) -> params`` + ``apply(params, x) -> y``
+pair. Layer stacks are initialized with a leading ``L`` axis for lax.scan.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------- init utils
+
+def dense_init(key, in_dim: int, out_shape, dtype, scale: Optional[float] = None):
+    """Truncated-normal fan-in init; out_shape may be a tuple (fused heads)."""
+    if isinstance(out_shape, int):
+        out_shape = (out_shape,)
+    shape = (in_dim,) + tuple(out_shape)
+    std = scale if scale is not None else in_dim ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype):
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+def stacked(init_fn, key, n: int, *args, **kwargs):
+    """Initialize ``n`` stacked copies (leading axis) of a param tree."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: init_fn(k, *args, **kwargs))(keys)
+
+
+# ---------------------------------------------------------------------- norms
+
+def init_rmsnorm(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.zeros((dim,), dtype)}  # gemma-style (1+scale)
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(dt)
+
+
+def init_layernorm(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(dt)
+
+
+# --------------------------------------------------------------------- rotary
+
+def rotary_embed(x, positions, theta: float = 10000.0):
+    """Apply rotary position embedding.
+
+    x: (..., seq, heads, head_dim); positions: (..., seq) int32.
+    """
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., seq, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, dim: int) -> np.ndarray:
+    pos = np.arange(seq)[:, None]
+    i = np.arange(dim // 2)[None, :]
+    angle = pos / np.power(10000.0, 2 * i / dim)
+    out = np.concatenate([np.sin(angle), np.cos(angle)], axis=-1)
+    return out.astype(np.float32)
+
+
+# ----------------------------------------------------------------------- MLPs
+
+def init_glu_mlp(key, d_model: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": dense_init(k1, d_model, d_ff, dtype),
+        "wi_up": dense_init(k2, d_model, d_ff, dtype),
+        "wo": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def glu_mlp(params, x, activation: str = "silu"):
+    act = {"silu": jax.nn.silu, "gelu": functools.partial(jax.nn.gelu, approximate=True)}[activation]
+    gate = act(x @ params["wi_gate"].astype(x.dtype))
+    up = x @ params["wi_up"].astype(x.dtype)
+    return (gate * up) @ params["wo"].astype(x.dtype)
+
+
+def init_gelu_mlp(key, d_model: int, d_ff: int, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "wi": dense_init(k1, d_model, d_ff, dtype),
+        "bi": jnp.zeros((d_ff,), dtype),
+        "wo": dense_init(k2, d_ff, d_model, dtype),
+        "bo": jnp.zeros((d_model,), dtype),
+    }
+
+
+def gelu_mlp(params, x):
+    h = jax.nn.gelu(x @ params["wi"].astype(x.dtype) + params["bi"].astype(x.dtype),
+                    approximate=True)
+    return h @ params["wo"].astype(x.dtype) + params["bo"].astype(x.dtype)
+
+
+# -------------------------------------------------------------------- softcap
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap

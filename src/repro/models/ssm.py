@@ -1,0 +1,220 @@
+"""Mamba2 / SSD (state-space duality) block, chunked-parallel train scan and
+O(1)-state decode step. [arXiv:2405.21060]
+
+Train path implements the SSD block decomposition:
+  intra-chunk (quadratic within chunk L): Y_diag = (C B^T ∘ decay) · (dt x)
+  chunk states:  S_c = Σ_j exp(cumA_end - cumA_j) dt_j B_j ⊗ x_j
+  inter-chunk:   associative scan  S'_c = exp(sumA_c) S'_{c-1} + S_c
+  output:        Y = Y_diag + C · S'_{prev} ∘ exp(cumA) + D x
+
+The chunked scan is the jnp oracle mirrored by the Pallas kernel in
+``repro.kernels.ssd_scan``.
+"""
+from __future__ import annotations
+
+import os
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models.layers import dense_init, init_rmsnorm, rmsnorm
+
+
+def dims(d_model: int, ssm: SSMConfig):
+    d_inner = ssm.expand * d_model
+    n_heads = d_inner // ssm.head_dim
+    return d_inner, n_heads
+
+
+def init_mamba(key, d_model: int, ssm: SSMConfig, dtype):
+    di, nh = dims(d_model, ssm)
+    n = ssm.state_dim
+    ks = jax.random.split(key, 8)
+    p = {
+        "wz": dense_init(ks[0], d_model, di, dtype),
+        "wx": dense_init(ks[1], d_model, di, dtype),
+        "wB": dense_init(ks[2], d_model, n, dtype),
+        "wC": dense_init(ks[3], d_model, n, dtype),
+        "wdt": dense_init(ks[4], d_model, nh, dtype),
+        "conv_x": (jax.random.normal(ks[5], (ssm.conv_dim, di), jnp.float32)
+                   * (1.0 / ssm.conv_dim)).astype(dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "gate_norm": init_rmsnorm(di),
+        "out_proj": dense_init(ks[6], di, d_model, dtype),
+    }
+    return p
+
+
+def _depthwise_conv(x, w):
+    """Causal depthwise conv. x: (B,S,C), w: (W,C)."""
+    wdt = w.astype(x.dtype)
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(width):
+        out = out + xp[:, i:i + x.shape[1]] * wdt[i]
+    return out
+
+
+def _segsum_decay(cum):
+    """cum: (B,nc,L,H) -> decay (B,H,nc,L,L) = exp(cum_i - cum_j), i>=j."""
+    ci = cum[..., :, None, :]   # (B,nc,L,1,H)
+    cj = cum[..., None, :, :]   # (B,nc,1,L,H)
+    diff = ci - cj
+    l = cum.shape[2]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    diff = jnp.where(mask[None, None, :, :, None], diff, -jnp.inf)
+    return jnp.exp(diff)        # (B,nc,L,L,H)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """SSD chunked-parallel scan.
+
+    x: (B,S,H,P) f32, dt: (B,S,H) f32 (already softplus'ed),
+    A: (H,) negative, B/C: (B,S,N).
+    Returns y: (B,S,H,P), final_state: (B,H,P,N).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    s_orig = s
+    if s % chunk:
+        # pad to a chunk multiple; dt=0 rows are exact no-ops for the scan
+        # (decay exp(0)=1, state/output contributions scale with dt).
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    nc = s // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, n)
+    Cc = C.reshape(b, nc, chunk, n)
+
+    dA = dtc * A[None, None, None, :]             # (B,nc,L,H)
+    cum = jnp.cumsum(dA, axis=2)                  # (B,nc,L,H)
+    xdt = xc * dtc[..., None]                     # (B,nc,L,H,P)
+
+    # --- intra-chunk (quadratic in L)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)    # (B,nc,L,L)
+    decay = _segsum_decay(cum)                    # (B,nc,L,L,H)
+    y_diag = jnp.einsum("bcij,bcijh,bcjhp->bcihp", cb, decay, xdt)
+
+    # --- chunk states
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)          # (B,nc,L,H)
+    states = jnp.einsum("bclh,bclhp,bcln->bchpn", decay_to_end, xdt, Bc)
+
+    # --- inter-chunk associative scan
+    chunk_decay = jnp.exp(jnp.sum(dA, axis=2))                # (B,nc,H)
+
+    def combine(left, right):
+        a_l, s_l = left
+        a_r, s_r = right
+        return a_l * a_r, s_l * a_r[..., None, None] + s_r
+
+    a_scan, s_scan = jax.lax.associative_scan(
+        combine, (chunk_decay, states), axis=1)
+    # state entering chunk c is the scanned state of chunk c-1 (zero for c=0)
+    prev = jnp.concatenate(
+        [jnp.zeros_like(s_scan[:, :1]), s_scan[:, :-1]], axis=1)
+
+    # --- inter-chunk contribution
+    y_inter = jnp.einsum("bcln,bclh,bchpn->bclhp", Cc, jnp.exp(cum), prev)
+
+    y = (y_diag + y_inter).reshape(b, s, h, p)[:, :s_orig]
+    return y, s_scan[:, -1]                                   # (B,H,P,N)
+
+
+def _mamba_core(params, x_in, ssm: SSMConfig):
+    d_model = x_in.shape[-1]
+    di, nh = dims(d_model, ssm)
+    dt_raw = x_in @ params["wdt"].astype(x_in.dtype)
+    z = x_in @ params["wz"].astype(x_in.dtype)
+    xr_raw = x_in @ params["wx"].astype(x_in.dtype)
+    Bm = x_in @ params["wB"].astype(x_in.dtype)
+    Cm = x_in @ params["wC"].astype(x_in.dtype)
+
+    xr = jax.nn.silu(_depthwise_conv(xr_raw, params["conv_x"]))
+    b, s, _ = xr.shape
+    xh = xr.reshape(b, s, nh, ssm.head_dim).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"][None, None])
+    A = -jnp.exp(params["A_log"])
+    # §Perf: the (B,nc,L,L,H) intra-chunk decay tensor scales with L² —
+    # REPRO_SSD_CHUNK trades inter-chunk scan steps for decay memory.
+    chunk = int(os.environ.get("REPRO_SSD_CHUNK", ssm.chunk))
+    y, final_state = ssd_chunked(xh, dt, A, Bm.astype(jnp.float32),
+                                 Cm.astype(jnp.float32), min(chunk, s))
+    y = y + params["D"][None, None, :, None] * xh
+    y = y.reshape(b, s, di).astype(x_in.dtype)
+    y = rmsnorm(params["gate_norm"], y * jax.nn.silu(z))
+    out = y @ params["out_proj"].astype(x_in.dtype)
+    return out, final_state, xr_raw
+
+
+def mamba_forward(params, x_in, ssm: SSMConfig):
+    """Full Mamba2 mixer on (B,S,D). Returns (B,S,D)."""
+    out, _, _ = _mamba_core(params, x_in, ssm)
+    return out
+
+
+def mamba_forward_with_state(params, x_in, ssm: SSMConfig):
+    """Prefill variant: returns (out, final_ssm_state, conv_tail).
+
+    conv_tail is the last (conv_dim-1) *pre-conv* channel inputs, i.e. the
+    conv ring state expected by mamba_decode_step.
+    """
+    out, final_state, xr_raw = _mamba_core(params, x_in, ssm)
+    w = ssm.conv_dim
+    tail = xr_raw[:, -(w - 1):]
+    pad = (w - 1) - tail.shape[1]
+    if pad > 0:
+        tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+    return out, final_state, tail
+
+
+# ------------------------------------------------------------------- decode
+
+def init_mamba_cache(batch: int, d_model: int, ssm: SSMConfig, dtype):
+    di, nh = dims(d_model, ssm)
+    return {
+        "state": jnp.zeros((batch, nh, ssm.head_dim, ssm.state_dim),
+                           jnp.float32),
+        "conv": jnp.zeros((batch, ssm.conv_dim - 1, di), dtype),
+    }
+
+
+def mamba_decode_step(params, x_in, cache, ssm: SSMConfig):
+    """x_in: (B,1,D) -> (B,1,D), updated cache. O(1) per token."""
+    d_model = x_in.shape[-1]
+    di, nh = dims(d_model, ssm)
+    x1 = x_in[:, 0]                                   # (B,D)
+    z = x1 @ params["wz"].astype(x1.dtype)
+    xr = x1 @ params["wx"].astype(x1.dtype)
+    Bm = (x1 @ params["wB"].astype(x1.dtype)).astype(jnp.float32)
+    Cm = (x1 @ params["wC"].astype(x1.dtype)).astype(jnp.float32)
+    dt_raw = x1 @ params["wdt"].astype(x1.dtype)
+
+    # causal depthwise conv via the conv-state ring
+    conv_hist = jnp.concatenate([cache["conv"], xr[:, None]], axis=1)
+    w = params["conv_x"].astype(xr.dtype)             # (W, di)
+    xr = jax.nn.silu(jnp.einsum("bwc,wc->bc", conv_hist, w))
+    new_conv = conv_hist[:, 1:]
+
+    xh = xr.reshape(-1, nh, ssm.head_dim).astype(jnp.float32)   # (B,H,P)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    da = jnp.exp(dt * A)                               # (B,H)
+    state = cache["state"] * da[..., None, None]
+    state = state + (dt[..., None] * xh)[..., None] * Bm[:, None, None, :]
+    y = jnp.einsum("bhpn,bn->bhp", state, Cm)
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(-1, di).astype(x_in.dtype)
+    y = rmsnorm(params["gate_norm"], y * jax.nn.silu(z))
+    out = (y @ params["out_proj"].astype(x_in.dtype))[:, None]
+    return out, {"state": state, "conv": new_conv}

@@ -1,0 +1,534 @@
+"""Decoder-LM assembly for dense / moe / ssm / hybrid / vlm families.
+
+Train/prefill run layers under a remat'd ``lax.scan`` over stacked params
+(per-layer differences — gemma2 local/global windows, hymba global layers —
+ride along as scanned ``windows`` data). Decode runs a Python loop over
+layers so per-layer cache shapes may be heterogeneous (ring-buffer windowed
+caches vs full-context caches vs SSM state).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (dense_init, dtype_of, embed_init,
+                                 glu_mlp, init_glu_mlp, init_rmsnorm,
+                                 rmsnorm, softcap, stacked)
+from repro.sharding import DP, shard_act, shard_attn_act
+
+FULL_WINDOW = 0  # window value meaning "no sliding window"
+
+
+# ------------------------------------------------------------ layer metadata
+
+def layer_windows(cfg: ArchConfig, *, force_window: bool = False):
+    """Per-layer sliding window (0 = full attention)."""
+    wins = []
+    for i in range(cfg.n_layers):
+        if cfg.local_global_alternate:
+            w = cfg.sliding_window if (i % 2 == 0 or force_window) else 0
+        elif cfg.family == "hybrid":
+            is_global = i in cfg.hybrid_global_layers
+            w = 0 if (is_global and not force_window) else cfg.sliding_window
+        elif cfg.sliding_window:
+            w = cfg.sliding_window
+        else:
+            w = 0
+        wins.append(w)
+    return wins
+
+
+# ------------------------------------------------------------------- init
+
+def init_layer(key, cfg: ArchConfig):
+    dt = dtype_of(cfg.param_dtype)
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {}
+    fam = cfg.family
+    if fam == "ssm":
+        p["norm"] = init_rmsnorm(d)
+        p["mamba"] = ssm_mod.init_mamba(ks[0], d, cfg.ssm, dt)
+        return p
+    if fam == "hybrid":
+        p["input_norm"] = init_rmsnorm(d)
+        p["attn"] = attn_mod.init_attention(
+            ks[0], d, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim, dt,
+            use_bias=cfg.qkv_bias)
+        p["mamba"] = ssm_mod.init_mamba(ks[1], d, cfg.ssm, dt)
+        p["attn_out_norm"] = init_rmsnorm(d)
+        p["ssm_out_norm"] = init_rmsnorm(d)
+        p["mlp_norm"] = init_rmsnorm(d)
+        p["mlp"] = init_glu_mlp(ks[2], d, cfg.d_ff, dt)
+        return p
+    # dense / moe / vlm-LM backbone
+    p["attn_norm"] = init_rmsnorm(d)
+    p["attn"] = attn_mod.init_attention(
+        ks[0], d, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim, dt,
+        use_bias=cfg.qkv_bias)
+    p["mlp_norm"] = init_rmsnorm(d)
+    if cfg.moe is not None:
+        p["moe"] = moe_mod.init_moe(ks[1], d, cfg.d_ff, cfg.moe, dt)
+    else:
+        p["mlp"] = init_glu_mlp(ks[1], d, cfg.d_ff, dt)
+    if cfg.sandwich_norms:
+        p["post_attn_norm"] = init_rmsnorm(d)
+        p["post_mlp_norm"] = init_rmsnorm(d)
+    return p
+
+
+def init_lm(key, cfg: ArchConfig):
+    dt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    params: Dict[str, Any] = {
+        "embed": embed_init(ks[0], cfg.vocab_padded, cfg.d_model, dt),
+        "layers": stacked(init_layer, ks[1], cfg.n_layers, cfg),
+        "final_norm": init_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[2], cfg.d_model, cfg.vocab_padded, dt)
+    if cfg.hybrid_meta_tokens:
+        params["meta_tokens"] = (
+            jax.random.normal(ks[3], (cfg.hybrid_meta_tokens, cfg.d_model),
+                              jnp.float32) * 0.02).astype(dt)
+    if cfg.vision_tokens:
+        params["vision_proj"] = dense_init(ks[4], cfg.d_model, cfg.d_model, dt)
+    return params
+
+
+# --------------------------------------------------------------- block fwd
+
+def _attention_path(lp, x_norm, cfg: ArchConfig, positions, window, prefix,
+                    impl):
+    q, k, v = attn_mod.qkv_project(lp, x_norm)
+    q = attn_mod.rotary_embed(q, positions, cfg.rope_theta)
+    k = attn_mod.rotary_embed(k, positions, cfg.rope_theta)
+    # heads→model when divisible, else q-sequence→model (context parallel)
+    q = shard_attn_act(q)
+    out = attn_mod.attend(
+        q, k, v, q_pos=positions, k_pos=positions, causal=True,
+        window=window, prefix=prefix, logit_cap=cfg.attn_logit_softcap,
+        impl=impl)
+    out = shard_attn_act(out)
+    return attn_mod.out_project(lp, out)
+
+
+def block_forward(lp, x, cfg: ArchConfig, positions, window, impl):
+    """One decoder block. Returns (x, aux_loss)."""
+    eps = cfg.norm_eps
+    aux = jnp.zeros((), jnp.float32)
+    fam = cfg.family
+    prefix = cfg.hybrid_meta_tokens
+    if fam == "ssm":
+        h = rmsnorm(lp["norm"], x, eps)
+        x = x + ssm_mod.mamba_forward(lp["mamba"], h, cfg.ssm)
+        return shard_act(x, DP, None, "model"), aux
+    if fam == "hybrid":
+        h = rmsnorm(lp["input_norm"], x, eps)
+        a = _attention_path(lp["attn"], h, cfg, positions, window, prefix, impl)
+        s = ssm_mod.mamba_forward(lp["mamba"], h, cfg.ssm)
+        mixed = 0.5 * (rmsnorm(lp["attn_out_norm"], a, eps)
+                       + rmsnorm(lp["ssm_out_norm"], s, eps))
+        x = x + mixed
+        h2 = rmsnorm(lp["mlp_norm"], x, eps)
+        x = x + glu_mlp(lp["mlp"], h2, cfg.mlp_act)
+        return shard_act(x, DP, None, "model"), aux
+    # dense / moe
+    h = rmsnorm(lp["attn_norm"], x, eps)
+    a = _attention_path(lp["attn"], h, cfg, positions, window, 0, impl)
+    if cfg.sandwich_norms:
+        a = rmsnorm(lp["post_attn_norm"], a, eps)
+    x = x + a
+    h2 = rmsnorm(lp["mlp_norm"], x, eps)
+    if cfg.moe is not None:
+        m, aux = moe_mod.moe_forward(lp["moe"], h2, cfg.moe)
+    else:
+        m = glu_mlp(lp["mlp"], h2, cfg.mlp_act)
+    if cfg.sandwich_norms:
+        m = rmsnorm(lp["post_mlp_norm"], m, eps)
+    x = x + m
+    return shard_act(x, DP, None, "model"), aux
+
+
+# ----------------------------------------------------------------- forward
+
+def embed_inputs(params, cfg: ArchConfig, tokens, extra_embeds=None):
+    """tokens (B,S) [+ patch/frame embeds] -> (x (B,S',D), n_prefix)."""
+    dt = dtype_of(cfg.dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+    n_prefix = 0
+    if cfg.vision_tokens and extra_embeds is not None:
+        patches = (extra_embeds.astype(dt)
+                   @ params["vision_proj"].astype(dt))
+        x = jnp.concatenate([patches, x], axis=1)
+        n_prefix += patches.shape[1]
+    if cfg.hybrid_meta_tokens:
+        meta = jnp.broadcast_to(
+            params["meta_tokens"].astype(dt)[None],
+            (x.shape[0],) + params["meta_tokens"].shape)
+        x = jnp.concatenate([meta, x], axis=1)
+        n_prefix += cfg.hybrid_meta_tokens
+    return shard_act(x, DP, None, "model"), n_prefix
+
+
+def lm_logits(params, cfg: ArchConfig, x):
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x @ head.astype(x.dtype)
+    logits = softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)
+    return shard_act(logits, DP, None, "model")
+
+
+def forward_lm(params, cfg: ArchConfig, tokens, extra_embeds=None, *,
+               remat: bool = True, attn_impl: str = "auto",
+               unroll: bool = False):
+    """Full-sequence forward. Returns (logits (B,S',Vp), aux_loss, n_prefix).
+
+    ``unroll=True`` replaces the layer lax.scan with a Python loop (each
+    layer individually remat'd). MoE architectures use this under expert
+    parallelism: XLA hoists loop-invariant FSDP all-gathers out of while
+    loops, which would materialize the whole stacked expert tensor at once.
+    """
+    x, n_prefix = embed_inputs(params, cfg, tokens, extra_embeds)
+    s_total = x.shape[1]
+    positions = jnp.arange(s_total, dtype=jnp.int32)
+
+    if unroll:
+        wins = layer_windows(cfg)
+        aux_total = jnp.zeros((), jnp.float32)
+
+        def one_layer(lp, carry, win):
+            return block_forward(lp, carry, cfg, positions, win, attn_impl)
+
+        # prevent_cse=True is REQUIRED here: in an unrolled loop XLA would
+        # CSE each layer's recomputed (bwd) FSDP weight-gather with the fwd
+        # one, extending every gathered slab's lifetime across the whole
+        # step (~n_layers × slab peak memory).
+        layer_fn = (jax.checkpoint(one_layer, prevent_cse=True,
+                                   static_argnums=(2,))
+                    if remat else one_layer)
+        for i in range(cfg.n_layers):
+            lp = _layer_params(params, i)
+            x, aux = layer_fn(lp, x, wins[i])
+            aux_total = aux_total + aux
+        return lm_logits(params, cfg, x), aux_total, n_prefix
+
+    windows = jnp.asarray(layer_windows(cfg), jnp.int32)
+
+    def body(carry, xs):
+        lp, win = xs
+        y, aux = block_forward(lp, carry, cfg, positions, win, attn_impl)
+        return y, aux
+
+    scan_body = jax.checkpoint(body, prevent_cse=False) if remat else body
+    x, auxs = jax.lax.scan(scan_body, x, (params["layers"], windows))
+    return lm_logits(params, cfg, x), jnp.sum(auxs), n_prefix
+
+
+# ------------------------------------------------------------------ decode
+
+def _layer_params(params, i: int):
+    return jax.tree_util.tree_map(lambda p: p[i], params["layers"])
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, context_len: int, *,
+                      force_window: bool = False):
+    """Per-layer cache list sized for decoding with ``context_len`` history."""
+    dt = dtype_of(cfg.dtype)
+    prefix = cfg.hybrid_meta_tokens
+    # full-attention layers must also hold any always-prepended prefix
+    # (hymba meta tokens, internvl vision patches)
+    cap_full = context_len + cfg.hybrid_meta_tokens + cfg.vision_tokens
+    wins = layer_windows(cfg, force_window=force_window)
+    caches: List[Any] = []
+    for i in range(cfg.n_layers):
+        entry: Dict[str, Any] = {}
+        if cfg.family in ("dense", "moe", "vlm"):
+            cap = (prefix + min(wins[i], context_len)) if wins[i] else cap_full
+            entry["attn"] = attn_mod.init_cache(
+                batch, cap, cfg.n_kv_heads, cfg.resolved_head_dim, dt)
+        elif cfg.family == "ssm":
+            entry["ssm"] = ssm_mod.init_mamba_cache(batch, cfg.d_model, cfg.ssm, dt)
+        elif cfg.family == "hybrid":
+            cap = (prefix + min(wins[i], context_len)) if wins[i] else cap_full
+            entry["attn"] = attn_mod.init_cache(
+                batch, cap, cfg.n_kv_heads, cfg.resolved_head_dim, dt)
+            entry["ssm"] = ssm_mod.init_mamba_cache(batch, cfg.d_model, cfg.ssm, dt)
+        caches.append(entry)
+    return caches
+
+
+def _decode_attn(lp, cfg, x_norm, cache, cur_index, window, prefix):
+    q, k, v = attn_mod.qkv_project(lp, x_norm)
+    pos = cur_index[None].astype(jnp.int32)
+    q = attn_mod.rotary_embed(q, pos, cfg.rope_theta)
+    k = attn_mod.rotary_embed(k, pos, cfg.rope_theta)
+    new_cache = attn_mod.cache_update(cache, k, v, cur_index,
+                                      window=window, prefix=prefix)
+    out = attn_mod.decode_attention(
+        q, new_cache, cur_index, window=window, prefix=prefix,
+        logit_cap=cfg.attn_logit_softcap)
+    return attn_mod.out_project(lp, out), new_cache
+
+
+def decode_step(params, cfg: ArchConfig, caches, cur_index, token, *,
+                force_window: bool = False):
+    """One decode step. token: (B,) int32; cur_index: scalar absolute position
+    (including any meta/vision prefix). Returns (logits (B,Vp), caches)."""
+    dt = dtype_of(cfg.dtype)
+    eps = cfg.norm_eps
+    x = jnp.take(params["embed"], token, axis=0)[:, None].astype(dt)  # (B,1,D)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+    x = shard_act(x, DP, None, "model")
+    prefix = cfg.hybrid_meta_tokens
+    wins = layer_windows(cfg, force_window=force_window)
+    new_caches = []
+    for i in range(cfg.n_layers):
+        lp = _layer_params(params, i)
+        cache = caches[i]
+        entry = dict(cache)
+        win = wins[i]
+        if cfg.family == "ssm":
+            h = rmsnorm(lp["norm"], x, eps)
+            y, entry["ssm"] = ssm_mod.mamba_decode_step(
+                lp["mamba"], h, cache["ssm"], cfg.ssm)
+            x = x + y
+        elif cfg.family == "hybrid":
+            h = rmsnorm(lp["input_norm"], x, eps)
+            a, entry["attn"] = _decode_attn(
+                lp["attn"], cfg, h, cache["attn"], cur_index, win, prefix)
+            s, entry["ssm"] = ssm_mod.mamba_decode_step(
+                lp["mamba"], h, cache["ssm"], cfg.ssm)
+            x = x + 0.5 * (rmsnorm(lp["attn_out_norm"], a, eps)
+                           + rmsnorm(lp["ssm_out_norm"], s, eps))
+            x = x + glu_mlp(lp["mlp"], rmsnorm(lp["mlp_norm"], x, eps),
+                            cfg.mlp_act)
+        else:
+            h = rmsnorm(lp["attn_norm"], x, eps)
+            a, entry["attn"] = _decode_attn(
+                lp["attn"], cfg, h, cache["attn"], cur_index, win, 0)
+            if cfg.sandwich_norms:
+                a = rmsnorm(lp["post_attn_norm"], a, eps)
+            x = x + a
+            h2 = rmsnorm(lp["mlp_norm"], x, eps)
+            if cfg.moe is not None:
+                m, _ = moe_mod.moe_forward(lp["moe"], h2, cfg.moe)
+            else:
+                m = glu_mlp(lp["mlp"], h2, cfg.mlp_act)
+            if cfg.sandwich_norms:
+                m = rmsnorm(lp["post_mlp_norm"], m, eps)
+            x = x + m
+        new_caches.append(entry)
+    logits = lm_logits(params, cfg, x)[:, 0]
+    return logits, new_caches
+
+
+def uniform_decode(cfg: ArchConfig) -> bool:
+    """True when every layer's decode cache has identical shape — dense/vlm
+    without windows, or pure SSM — so decode can lax.scan over layers.
+
+    MoE archs are excluded: under expert parallelism the per-layer FSDP
+    all-gather of the expert slabs is loop-invariant, and XLA hoists it out
+    of a scanned decode as one stacked gather (OOM); the Python layer loop
+    keeps each layer's gather transient."""
+    if cfg.family == "ssm":
+        return True
+    if cfg.family in ("dense", "vlm") and cfg.moe is None:
+        return all(w == 0 for w in layer_windows(cfg))
+    return False
+
+
+def init_decode_state_scanned(cfg: ArchConfig, batch: int, context_len: int):
+    """Stacked (leading L axis) caches for the scanned decode path."""
+    dt = dtype_of(cfg.dtype)
+    L = cfg.n_layers
+    if cfg.family == "ssm":
+        one = ssm_mod.init_mamba_cache(batch, cfg.d_model, cfg.ssm, dt)
+    else:
+        one = attn_mod.init_cache(batch, context_len, cfg.n_kv_heads,
+                                  cfg.resolved_head_dim, dt)
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (L,) + a.shape), one)
+
+
+def decode_step_scanned(params, cfg: ArchConfig, caches, cur_index, token):
+    """Scanned-over-layers decode (uniform cache shapes only).
+
+    caches: stacked pytree from init_decode_state_scanned.
+    Returns (logits (B,Vp), new stacked caches).
+    """
+    assert uniform_decode(cfg), cfg.arch_id
+    dt = dtype_of(cfg.dtype)
+    eps = cfg.norm_eps
+    x = jnp.take(params["embed"], token, axis=0)[:, None].astype(dt)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+    x = shard_act(x, DP, None, "model")
+
+    def body(carry, xs):
+        lp, cache = xs
+        if cfg.family == "ssm":
+            h = rmsnorm(lp["norm"], carry, eps)
+            y, new_cache = ssm_mod.mamba_decode_step(lp["mamba"], h, cache,
+                                                     cfg.ssm)
+            return carry + y, new_cache
+        h = rmsnorm(lp["attn_norm"], carry, eps)
+        a, new_cache = _decode_attn(lp["attn"], cfg, h, cache, cur_index,
+                                    0, 0)
+        if cfg.sandwich_norms:
+            a = rmsnorm(lp["post_attn_norm"], a, eps)
+        carry = carry + a
+        h2 = rmsnorm(lp["mlp_norm"], carry, eps)
+        if cfg.moe is not None:
+            m, _ = moe_mod.moe_forward(lp["moe"], h2, cfg.moe)
+        else:
+            m = glu_mlp(lp["mlp"], h2, cfg.mlp_act)
+        if cfg.sandwich_norms:
+            m = rmsnorm(lp["post_mlp_norm"], m, eps)
+        carry = carry + m
+        return shard_act(carry, DP, None, "model"), new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (params["layers"], caches))
+    logits = lm_logits(params, cfg, x)[:, 0]
+    return logits, new_caches
+
+
+def prefill(params, cfg: ArchConfig, tokens, extra_embeds=None, *,
+            context_len: Optional[int] = None, force_window: bool = False,
+            attn_impl: str = "auto", last_only: bool = False):
+    """Run the full prompt and build decode caches.
+
+    Returns (logits (B,S',Vp) — or (B,1,Vp) when ``last_only``, the serving
+    fast path that avoids materializing seq×vocab logits —, caches,
+    next_index).
+    """
+    dt = dtype_of(cfg.dtype)
+    eps = cfg.norm_eps
+    x, n_prefix = embed_inputs(params, cfg, tokens, extra_embeds)
+    b, s_total, _ = x.shape
+    context_len = context_len or s_total
+    positions = jnp.arange(s_total, dtype=jnp.int32)
+    wins = layer_windows(cfg, force_window=force_window)
+    prefix = cfg.hybrid_meta_tokens
+    caches = init_decode_state(cfg, b, context_len, force_window=force_window)
+    new_caches = []
+    for i in range(cfg.n_layers):
+        lp = _layer_params(params, i)
+        entry = dict(caches[i])
+        win = wins[i]
+        if cfg.family == "ssm":
+            h = rmsnorm(lp["norm"], x, eps)
+            x, entry["ssm"] = _mamba_prefill(lp["mamba"], h, entry["ssm"],
+                                             cfg, x)
+        elif cfg.family == "hybrid":
+            h = rmsnorm(lp["input_norm"], x, eps)
+            a, entry["attn"] = _attn_prefill(
+                lp["attn"], cfg, h, entry["attn"], positions, win, prefix,
+                attn_impl)
+            s, entry["ssm"] = _mamba_prefill_out(lp["mamba"], h, entry["ssm"],
+                                                 cfg)
+            x = x + 0.5 * (rmsnorm(lp["attn_out_norm"], a, eps)
+                           + rmsnorm(lp["ssm_out_norm"], s, eps))
+            x = x + glu_mlp(lp["mlp"], rmsnorm(lp["mlp_norm"], x, eps),
+                            cfg.mlp_act)
+        else:
+            h = rmsnorm(lp["attn_norm"], x, eps)
+            a, entry["attn"] = _attn_prefill(
+                lp["attn"], cfg, h, entry["attn"], positions, win, 0,
+                attn_impl)
+            if cfg.sandwich_norms:
+                a = rmsnorm(lp["post_attn_norm"], a, eps)
+            x = x + a
+            h2 = rmsnorm(lp["mlp_norm"], x, eps)
+            if cfg.moe is not None:
+                m, _ = moe_mod.moe_forward(lp["moe"], h2, cfg.moe)
+            else:
+                m = glu_mlp(lp["mlp"], h2, cfg.mlp_act)
+            if cfg.sandwich_norms:
+                m = rmsnorm(lp["post_mlp_norm"], m, eps)
+            x = x + m
+        x = shard_act(x, DP, None, "model")
+        new_caches.append(entry)
+    logits = lm_logits(params, cfg, x[:, -1:] if last_only else x)
+    return logits, new_caches, jnp.asarray(s_total, jnp.int32)
+
+
+def prefill_scanned(params, cfg: ArchConfig, tokens, extra_embeds=None, *,
+                    context_len: Optional[int] = None,
+                    attn_impl: str = "auto", last_only: bool = False):
+    """Layer-scanned prefill for uniform-cache archs (dense/vlm no-window,
+    ssm): one compact scan emits the stacked caches used by
+    decode_step_scanned — keeps 80-layer HLOs small for the dry-run."""
+    assert uniform_decode(cfg), cfg.arch_id
+    dt = dtype_of(cfg.dtype)
+    eps = cfg.norm_eps
+    x, n_prefix = embed_inputs(params, cfg, tokens, extra_embeds)
+    b, s_total, _ = x.shape
+    context_len = context_len or s_total
+    cap = context_len + cfg.hybrid_meta_tokens + cfg.vision_tokens
+    positions = jnp.arange(s_total, dtype=jnp.int32)
+
+    def body(carry, lp):
+        if cfg.family == "ssm":
+            h = rmsnorm(lp["norm"], carry, eps)
+            y, state, conv = ssm_mod.mamba_forward_with_state(lp["mamba"],
+                                                              h, cfg.ssm)
+            return (shard_act(carry + y, DP, None, "model"),
+                    {"state": state, "conv": conv})
+        h = rmsnorm(lp["attn_norm"], carry, eps)
+        q, k, v = attn_mod.qkv_project(lp["attn"], h)
+        q = attn_mod.rotary_embed(q, positions, cfg.rope_theta)
+        k = attn_mod.rotary_embed(k, positions, cfg.rope_theta)
+        a = attn_mod.attend(q, k, v, q_pos=positions, k_pos=positions,
+                            causal=True, logit_cap=cfg.attn_logit_softcap,
+                            impl=attn_impl)
+        cache = attn_mod.init_cache(b, cap, cfg.n_kv_heads,
+                                    cfg.resolved_head_dim, dt)
+        cache = attn_mod.cache_fill(cache, k.astype(dt), v.astype(dt))
+        a = attn_mod.out_project(lp["attn"], a)
+        if cfg.sandwich_norms:
+            a = rmsnorm(lp["post_attn_norm"], a, eps)
+        carry = carry + a
+        h2 = rmsnorm(lp["mlp_norm"], carry, eps)
+        m = glu_mlp(lp["mlp"], h2, cfg.mlp_act)
+        if cfg.sandwich_norms:
+            m = rmsnorm(lp["post_mlp_norm"], m, eps)
+        return shard_act(carry + m, DP, None, "model"), cache
+
+    x, caches = jax.lax.scan(body, x, params["layers"])
+    logits = lm_logits(params, cfg, x[:, -1:] if last_only else x)
+    return logits, caches, jnp.asarray(s_total, jnp.int32)
+
+
+def _attn_prefill(lp, cfg, h, cache, positions, window, prefix, impl):
+    q, k, v = attn_mod.qkv_project(lp, h)
+    q = attn_mod.rotary_embed(q, positions, cfg.rope_theta)
+    k = attn_mod.rotary_embed(k, positions, cfg.rope_theta)
+    out = attn_mod.attend(q, k, v, q_pos=positions, k_pos=positions,
+                          causal=True, window=window, prefix=prefix,
+                          logit_cap=cfg.attn_logit_softcap, impl=impl)
+    cache = attn_mod.cache_fill(cache, k, v, window=window, prefix=prefix)
+    return attn_mod.out_project(lp, out), cache
+
+
+def _mamba_prefill(lp, h, ssm_cache, cfg, x_resid):
+    y, final_state, conv_tail = ssm_mod.mamba_forward_with_state(
+        lp, h, cfg.ssm)
+    return (x_resid + y,
+            {"state": final_state, "conv": conv_tail})
+
+
+def _mamba_prefill_out(lp, h, ssm_cache, cfg):
+    y, final_state, conv_tail = ssm_mod.mamba_forward_with_state(
+        lp, h, cfg.ssm)
+    return y, {"state": final_state, "conv": conv_tail}

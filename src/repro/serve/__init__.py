@@ -1,0 +1,3 @@
+from repro.serve.engine import make_serve_step, make_prefill_step, greedy_decode
+
+__all__ = ["make_serve_step", "make_prefill_step", "greedy_decode"]

@@ -1,0 +1,86 @@
+"""Serving substrate: batched prefill + single-token decode steps.
+
+``make_serve_step`` builds the decode-shape dry-run target: ONE new token
+against a KV cache of ``context_len`` (the assignment's decode_32k /
+long_500k shapes). For long_500k, sub-quadratic families (ssm/hybrid and
+windowed dense) keep O(state) / O(window) caches via ``force_window``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import api
+
+
+def make_prefill_step(cfg: ArchConfig, *, context_len: int,
+                      force_window: bool = False, attn_impl: str = "auto"):
+    from repro.models import transformer
+
+    def prefill_step(params, batch):
+        return transformer.prefill(
+            params, cfg, batch["tokens"],
+            api.extra_embeds_of(cfg, batch),
+            context_len=context_len, force_window=force_window,
+            attn_impl=attn_impl)
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, *, force_window: bool = False):
+    """serve_step(params, caches, cur_index, token) -> (next_token, logits, caches)."""
+
+    def serve_step(params, caches, cur_index, token):
+        logits, caches = api.serve_decode_step(
+            params, cfg, caches, cur_index, token,
+            force_window=force_window)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, logits, caches
+    return serve_step
+
+
+def greedy_decode(params, cfg: ArchConfig, prompt_tokens, n_new: int, *,
+                  extra_embeds=None, force_window: bool = False,
+                  attn_impl: str = "auto"):
+    """Prefill a prompt then greedily decode ``n_new`` tokens (CPU-scale)."""
+    from repro.models import transformer
+
+    if cfg.family == "audio":
+        from repro.models import encdec
+        memory = encdec.encode(params, cfg, extra_embeds)
+        b, s = prompt_tokens.shape
+        caches = encdec.init_decode_state(params, cfg, b, s + n_new, memory)
+        # teacher-force the prompt through the cache
+        tok = prompt_tokens[:, 0]
+        logits = None
+        for t in range(s):
+            logits, caches = encdec.decode_step(
+                params, cfg, caches, jnp.asarray(t, jnp.int32),
+                prompt_tokens[:, t])
+        out = []
+        cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        for t in range(s, s + n_new):
+            out.append(cur)
+            logits, caches = encdec.decode_step(
+                params, cfg, caches, jnp.asarray(t, jnp.int32), cur)
+            cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jnp.stack(out, axis=1)
+
+    logits, caches, next_idx = transformer.prefill(
+        params, cfg, prompt_tokens, extra_embeds,
+        context_len=prompt_tokens.shape[1] + n_new +
+        (extra_embeds.shape[1] if extra_embeds is not None else 0) +
+        cfg.hybrid_meta_tokens,
+        force_window=force_window, attn_impl=attn_impl)
+    cur = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    step = make_serve_step(cfg, force_window=force_window)
+    out = []
+    idx = int(next_idx)
+    for t in range(n_new):
+        out.append(cur)
+        cur, _, caches = step(params, caches, jnp.asarray(idx + t, jnp.int32),
+                              cur)
+    return jnp.stack(out, axis=1)

@@ -1,0 +1,64 @@
+"""Per-sample-weighted losses — Eq. (2) of the paper.
+
+    L(D_core, W_core, θ) = Σ_i  w_i · L(x_i, θ)
+
+Every loss takes optional per-SAMPLE weights ``w`` (batch-shaped); token-level
+tasks broadcast the sample weight over the token axis. ``w=None`` means
+uniform (vanilla VFL "ALL" training). Losses normalize by Σw so learning
+rates transfer between weighted and unweighted runs.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _norm_weights(w, batch_shape):
+    if w is None:
+        w = jnp.ones(batch_shape, jnp.float32)
+    w = w.astype(jnp.float32)
+    return w, jnp.maximum(jnp.sum(w), 1e-12)
+
+
+def weighted_softmax_xent(logits, labels, w: Optional[jnp.ndarray] = None,
+                          *, label_mask=None):
+    """logits (..., C) f32, labels (...) int32, w broadcastable to labels.
+
+    Returns scalar Σ_i w_i·CE_i / Σ_i w_i.
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = logz - gold
+    if label_mask is not None:
+        ce = ce * label_mask.astype(jnp.float32)
+    if w is None:
+        w_full = jnp.ones(ce.shape, jnp.float32)
+    else:
+        w_full = jnp.broadcast_to(
+            w.reshape(w.shape + (1,) * (ce.ndim - w.ndim)).astype(jnp.float32),
+            ce.shape)
+    if label_mask is not None:
+        w_full = w_full * label_mask.astype(jnp.float32)
+    return jnp.sum(w_full * ce) / jnp.maximum(jnp.sum(w_full), 1e-12)
+
+
+def weighted_mse(pred, target, w: Optional[jnp.ndarray] = None):
+    """pred/target (B, ...) -> scalar Σ w_i ||p_i - t_i||² / Σ w_i."""
+    err = jnp.sum(jnp.square(pred.astype(jnp.float32)
+                             - target.astype(jnp.float32)),
+                  axis=tuple(range(1, pred.ndim)))
+    w, z = _norm_weights(w, err.shape)
+    return jnp.sum(w * err) / z
+
+
+def weighted_binary_xent(logits, labels, w: Optional[jnp.ndarray] = None):
+    """logits (B,) f32, labels (B,) in {0,1}."""
+    logits = logits.astype(jnp.float32)
+    labels = labels.astype(jnp.float32)
+    ce = jnp.maximum(logits, 0) - logits * labels + jnp.log1p(
+        jnp.exp(-jnp.abs(logits)))
+    w, z = _norm_weights(w, ce.shape)
+    return jnp.sum(w * ce) / z

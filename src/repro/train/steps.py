@@ -1,0 +1,64 @@
+"""train_step / eval_step factories for the LM architectures.
+
+Every train_step is Eq.(2)-aware: the batch may carry per-sample
+``weights`` (the TreeCSS coreset weights) which scale each sequence's
+token-level cross-entropy. This is how the paper's technique becomes a
+first-class feature of the framework rather than a bolt-on.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import api
+from repro.train.losses import weighted_softmax_xent
+from repro.train.optimizer import adam_init, adam_update
+
+
+def lm_loss(params, cfg: ArchConfig, batch: Dict[str, Any], *,
+            remat: bool = True, attn_impl: str = "auto",
+            unroll: bool = False):
+    logits, aux, n_prefix = api.forward(params, cfg, batch, remat=remat,
+                                        attn_impl=attn_impl, unroll=unroll)
+    # drop any meta/vision prefix, then shift: predict token t+1 at pos t
+    if n_prefix:
+        logits = logits[:, n_prefix:]
+    logits = logits[:, :-1]
+    labels = batch["labels"][:, 1:]
+    w = batch.get("weights")
+    ce = weighted_softmax_xent(logits, labels, w)
+    return ce + aux, (ce, aux)
+
+
+def make_train_step(cfg: ArchConfig, *, lr: float = 1e-4,
+                    remat: bool = True, attn_impl: str = "auto",
+                    unroll: bool = False):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+    loss_fn = functools.partial(lm_loss, cfg=cfg, remat=remat,
+                                attn_impl=attn_impl, unroll=unroll)
+
+    def train_step(params, opt_state, batch):
+        (loss, (ce, aux)), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch=batch), has_aux=True)(params)
+        params, opt_state = adam_update(params, grads, opt_state, lr=lr)
+        metrics = {"loss": loss, "ce": ce, "aux": aux}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ArchConfig, *, attn_impl: str = "auto"):
+    def eval_step(params, batch):
+        loss, (ce, aux) = lm_loss(params, cfg, batch, remat=False,
+                                  attn_impl=attn_impl)
+        return {"loss": loss, "ce": ce, "aux": aux}
+    return eval_step
+
+
+def init_train_state(key, cfg: ArchConfig):
+    params = api.init_params(key, cfg)
+    return params, adam_init(params)

@@ -1,0 +1,17 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_cls_partition(n=600, d=12, classes=2, clients=3, seed=0,
+                       margin=3.0):
+    """Separable gaussian-mixture dataset, vertically partitioned."""
+    from repro.data.synthetic import DatasetSpec, make_dataset
+    from repro.data.vertical import partition_features
+    spec = DatasetSpec("t", n, d, classes, margin=margin)
+    x, y = make_dataset(spec, seed=seed)
+    return partition_features(x, y, clients)

@@ -1,0 +1,43 @@
+"""Launch-layer integration: build_dryrun lowers+compiles on the host mesh
+(1×1, same axis names as production) for reduced archs and all shape kinds.
+The full 256/512-chip sweep runs via ``python -m repro.launch.dryrun``."""
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.launch.mesh import make_host_mesh
+from repro.launch.specs import build_dryrun, supports
+from repro.sharding import use_mesh
+
+TRAIN = ShapeConfig("t", 32, 4, "train")
+PREFILL = ShapeConfig("p", 64, 2, "prefill")
+DECODE = ShapeConfig("d", 64, 4, "decode")
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "olmoe-1b-7b",
+                                  "mamba2-1.3b", "gemma2-9b",
+                                  "whisper-large-v3", "internvl2-1b",
+                                  "hymba-1.5b"])
+@pytest.mark.parametrize("shape", [TRAIN, PREFILL, DECODE],
+                         ids=["train", "prefill", "decode"])
+def test_build_dryrun_compiles_on_host_mesh(arch, shape):
+    cfg = get_config(arch).reduced()
+    mesh = make_host_mesh()
+    with use_mesh(mesh):
+        fn, aargs, in_sh, out_sh = build_dryrun(cfg, shape, mesh)
+        compiled = jax.jit(fn, in_shardings=in_sh,
+                           out_shardings=out_sh).lower(*aargs).compile()
+    assert compiled.cost_analysis() is not None
+
+
+def test_long_context_support_matrix():
+    from repro.configs import INPUT_SHAPES
+    long = INPUT_SHAPES["long_500k"]
+    ok_archs = {a for a in ("mamba2-1.3b", "hymba-1.5b", "gemma2-9b")}
+    for arch in ok_archs:
+        assert supports(get_config(arch), long)[0]
+    for arch in ("tinyllama-1.1b", "qwen2-72b", "whisper-large-v3",
+                 "dbrx-132b"):
+        ok, why = supports(get_config(arch), long)
+        assert not ok and why

@@ -1,0 +1,46 @@
+"""Paillier HE: roundtrip, homomorphic ops, fixed-point packing."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import he
+
+PK, SK = he.keygen(256, seed=1)
+
+
+def test_roundtrip():
+    for m in (0, 1, 12345, PK.n - 1):
+        assert he.decrypt(SK, he.encrypt(PK, m)) == m
+
+
+def test_homomorphic_add():
+    a, b = 1234, 98765
+    ca, cb = he.encrypt(PK, a), he.encrypt(PK, b)
+    assert he.decrypt(SK, he.add_cipher(PK, ca, cb)) == a + b
+
+
+def test_scalar_mul():
+    c = he.encrypt(PK, 111)
+    assert he.decrypt(SK, he.mul_plain(PK, c, 7)) == 777
+
+
+def test_tuple_packing_roundtrip():
+    vals = [0.5, 3.0, 1.25]
+    c = he.encrypt_tuple(PK, vals)
+    out = he.decrypt_tuple(SK, c, 3)
+    assert out == pytest.approx(vals, abs=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.floats(0, 1000), min_size=1, max_size=4))
+def test_property_packing(vals):
+    packed = he.pack_fields(vals)
+    out = he.unpack_fields(packed, len(vals))
+    for v, o in zip(vals, out):
+        assert abs(v - o) < 1e-5 * max(1.0, abs(v)) + 1e-6
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**40), st.integers(0, 2**40))
+def test_property_additive_homomorphism(a, b):
+    ca, cb = he.encrypt(PK, a), he.encrypt(PK, b)
+    assert he.decrypt(SK, he.add_cipher(PK, ca, cb)) == (a + b) % PK.n

@@ -1,0 +1,63 @@
+"""JAX K-Means: convergence, empty-cluster handling, impl parity."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.kmeans import kmeans
+
+RNG = np.random.default_rng(0)
+
+
+def blobs(k=4, n_per=100, d=8, sep=6.0, seed=0):
+    rng = np.random.default_rng(seed)
+    return np.concatenate(
+        [rng.normal(i * sep, 1.0, (n_per, d)) for i in range(k)]
+    ).astype(np.float32)
+
+
+def test_kmeans_recovers_blobs():
+    x = blobs()
+    cents, assign, sqd = kmeans(x, 4, seed=1)
+    assert len(np.unique(assign)) == 4
+    # every blob maps to exactly one cluster
+    for i in range(4):
+        labels = assign[i * 100:(i + 1) * 100]
+        assert len(np.unique(labels)) == 1
+
+
+def test_pallas_impl_matches_ref():
+    x = blobs(seed=3)
+    c1, a1, d1 = kmeans(x, 4, seed=2, impl="ref")
+    c2, a2, d2 = kmeans(x, 4, seed=2, impl="pallas")
+    assert np.array_equal(a1, a2)
+    np.testing.assert_allclose(d1, d2, rtol=1e-3, atol=1e-3)
+
+
+def test_k_larger_than_points_is_capped_upstream():
+    x = blobs(k=1, n_per=10, seed=4)
+    cents, assign, sqd = kmeans(x, 5, seed=0)
+    assert cents.shape[0] == 5
+    assert np.isfinite(sqd).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(20, 150), st.integers(2, 10), st.integers(1, 16),
+       st.integers(0, 50))
+def test_property_inertia_nonincreasing_in_k(n, k, d, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    k2 = min(k, n)
+    _, _, sqd_k = kmeans(x, k2, seed=seed, iters=15)
+    _, _, sqd_1 = kmeans(x, 1, seed=seed, iters=15)
+    assert sqd_k.sum() <= sqd_1.sum() + 1e-3 * abs(sqd_1.sum())
+
+
+def test_minibatch_kmeans_quality():
+    """BEYOND-PAPER: mini-batch K-Means recovers the same blob structure
+    as Lloyd (quality parity at paper scales; see beyond_minibatch bench)."""
+    x = blobs(k=4, n_per=600, seed=9)
+    _, a_mb, sqd_mb = kmeans(x, 4, seed=3, algo="minibatch", batch=256)
+    _, a_ll, sqd_ll = kmeans(x, 4, seed=3, algo="lloyd")
+    assert len(np.unique(a_mb)) == 4
+    # inertia within 10% of Lloyd
+    assert sqd_mb.sum() <= 1.1 * sqd_ll.sum()

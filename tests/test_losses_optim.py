@@ -1,0 +1,77 @@
+"""Weighted losses (Eq. 2) and the Adam optimizer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.train.losses import (weighted_binary_xent, weighted_mse,
+                                weighted_softmax_xent)
+from repro.train.optimizer import adam_init, adam_update
+
+RNG = np.random.default_rng(0)
+
+
+def test_uniform_weights_equal_unweighted():
+    logits = jnp.asarray(RNG.normal(size=(8, 5)), jnp.float32)
+    labels = jnp.asarray(RNG.integers(0, 5, 8), jnp.int32)
+    w = jnp.ones((8,), jnp.float32)
+    assert float(weighted_softmax_xent(logits, labels)) == pytest.approx(
+        float(weighted_softmax_xent(logits, labels, w)), rel=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(0.1, 10.0))
+def test_weight_scale_invariance(scale):
+    logits = jnp.asarray(RNG.normal(size=(6, 4)), jnp.float32)
+    labels = jnp.asarray([0, 1, 2, 3, 0, 1], jnp.int32)
+    w = jnp.asarray(RNG.random(6) + 0.1, jnp.float32)
+    a = float(weighted_softmax_xent(logits, labels, w))
+    b = float(weighted_softmax_xent(logits, labels, w * scale))
+    assert a == pytest.approx(b, rel=1e-4)
+
+
+def test_zero_weight_removes_sample():
+    logits = jnp.asarray(RNG.normal(size=(4, 3)), jnp.float32)
+    labels = jnp.asarray([0, 1, 2, 0], jnp.int32)
+    w = jnp.asarray([1, 1, 1, 0], jnp.float32)
+    expect = float(weighted_softmax_xent(logits[:3], labels[:3]))
+    got = float(weighted_softmax_xent(logits, labels, w))
+    assert got == pytest.approx(expect, rel=1e-5)
+
+
+def test_weighted_mse_formula():
+    pred = jnp.asarray([[1.0], [2.0]], jnp.float32)
+    tgt = jnp.asarray([[0.0], [0.0]], jnp.float32)
+    w = jnp.asarray([3.0, 1.0], jnp.float32)
+    # (3·1 + 1·4)/4 = 1.75
+    assert float(weighted_mse(pred, tgt, w)) == pytest.approx(1.75)
+
+
+def test_binary_xent_matches_softmax_2class():
+    z = jnp.asarray(RNG.normal(size=(10,)), jnp.float32)
+    y = jnp.asarray(RNG.integers(0, 2, 10), jnp.int32)
+    two_logits = jnp.stack([jnp.zeros_like(z), z], axis=1)
+    a = float(weighted_binary_xent(z, y))
+    b = float(weighted_softmax_xent(two_logits, y))
+    assert a == pytest.approx(b, rel=1e-5)
+
+
+def test_adam_converges_quadratic():
+    params = {"x": jnp.asarray([5.0, -3.0], jnp.float32)}
+    state = adam_init(params)
+    for _ in range(400):
+        grads = jax.grad(lambda p: jnp.sum(p["x"] ** 2))(params)
+        params, state = adam_update(params, grads, state, lr=0.05)
+    assert float(jnp.max(jnp.abs(params["x"]))) < 1e-2
+    assert int(state.step) == 400
+
+
+def test_adam_bias_correction_first_step():
+    """First Adam step ≈ lr·sign(g) regardless of gradient scale."""
+    for g0 in (0.001, 1.0, 1000.0):
+        params = {"x": jnp.zeros((1,), jnp.float32)}
+        state = adam_init(params)
+        grads = {"x": jnp.asarray([g0], jnp.float32)}
+        new, _ = adam_update(params, grads, state, lr=0.1)
+        assert float(new["x"][0]) == pytest.approx(-0.1, rel=1e-3)

@@ -1,0 +1,86 @@
+"""Tree/Path/Star MPSI: correctness, round structure, scheduling."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.mpsi import path_mpsi, star_mpsi, tree_mpsi
+from repro.data.synthetic import make_id_universe
+
+
+@pytest.mark.parametrize("topology", [tree_mpsi, path_mpsi, star_mpsi])
+@pytest.mark.parametrize("protocol", ["rsa", "oprf"])
+def test_mpsi_correctness(topology, protocol):
+    sets, core = make_id_universe(5, 300, 0.7, seed=3)
+    res = topology(sets, protocol=protocol, use_he=False)
+    assert np.array_equal(res.intersection, core)
+
+
+def test_tree_round_complexity():
+    """Tree-MPSI needs ⌈log2 m⌉ rounds; path needs m-1."""
+    for m in (2, 3, 5, 8, 10):
+        sets, _ = make_id_universe(m, 50, 0.6, seed=m)
+        t = tree_mpsi(sets, protocol="oprf", use_he=False)
+        p = path_mpsi(sets, protocol="oprf", use_he=False)
+        assert t.rounds == math.ceil(math.log2(m))
+        assert p.rounds == m - 1
+
+
+def test_schedule_pairs_small_with_large():
+    """Volume-aware pairing: rank-k pairs with rank-(k+⌈U/2⌉)."""
+    sizes = [100, 200, 300, 400, 500, 600]
+    sets, _ = make_id_universe(6, sizes, 0.5, seed=1)
+    res = tree_mpsi(sets, protocol="rsa", volume_aware=True, use_he=False)
+    first_round = res.schedule[0]
+    assert len(first_round) == 3
+    paired = {frozenset(p) for p in first_round}
+    # ascending sort is by CURRENT holdings == construction sizes:
+    # pairs should be (0,3), (1,4), (2,5)
+    assert paired == {frozenset({0, 3}), frozenset({1, 4}),
+                      frozenset({2, 5})}
+
+
+def test_volume_aware_reduces_bytes():
+    sizes = [500 * (i + 1) for i in range(8)]
+    sets, core = make_id_universe(8, sizes, 0.7, seed=2)
+    opt = tree_mpsi(sets, protocol="rsa", volume_aware=True, use_he=False)
+    base = tree_mpsi(sets, protocol="rsa", volume_aware=False, use_he=False)
+    assert np.array_equal(opt.intersection, base.intersection)
+    assert opt.total_bytes < base.total_bytes
+
+
+def test_rsa_receiver_role_selection():
+    """RSA: within each pair, the smaller holder must act as receiver."""
+    sizes = [100, 800]
+    sets, _ = make_id_universe(2, sizes, 0.7, seed=5)
+    res = tree_mpsi(sets, protocol="rsa", volume_aware=True, use_he=False)
+    sender, receiver = res.schedule[0][0]
+    assert receiver == 0 and sender == 1
+
+
+def test_oprf_receiver_role_selection():
+    sizes = [100, 800]
+    sets, _ = make_id_universe(2, sizes, 0.7, seed=5)
+    res = tree_mpsi(sets, protocol="oprf", volume_aware=True, use_he=False)
+    sender, receiver = res.schedule[0][0]
+    assert receiver == 1 and sender == 0
+
+
+def test_he_broadcast_counted():
+    sets, core = make_id_universe(3, 60, 0.7, seed=7)
+    with_he = tree_mpsi(sets, protocol="oprf", use_he=True)
+    without = tree_mpsi(sets, protocol="oprf", use_he=False)
+    assert np.array_equal(with_he.intersection, core)
+    assert with_he.total_bytes > without.total_bytes  # ciphertext expansion
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 7), st.integers(10, 80),
+       st.floats(0.2, 0.9), st.integers(0, 100))
+def test_property_all_topologies_agree(m, n, overlap, seed):
+    sets, core = make_id_universe(m, n, overlap, seed=seed)
+    results = [fn(sets, protocol="oprf", use_he=False).intersection
+               for fn in (tree_mpsi, path_mpsi, star_mpsi)]
+    for r in results:
+        assert np.array_equal(r, core)

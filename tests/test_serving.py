@@ -1,0 +1,89 @@
+"""Serving engine: greedy decode, batched serve steps, cache semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import api, transformer
+from repro.models.attention import (cache_fill, cache_slot, cache_update,
+                                    init_cache)
+from repro.serve.engine import greedy_decode, make_serve_step
+
+
+def test_greedy_decode_runs_dense():
+    cfg = get_config("tinyllama-1.1b").reduced()
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    prompt = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab, (2, 8)), jnp.int32)
+    out = greedy_decode(params, cfg, prompt, 5)
+    assert out.shape == (2, 5)
+    assert int(out.max()) < cfg.vocab_padded
+
+
+def test_greedy_decode_runs_ssm():
+    cfg = get_config("mamba2-1.3b").reduced()
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    prompt = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
+    out = greedy_decode(params, cfg, prompt, 4)
+    assert out.shape == (1, 4)
+
+
+def test_serve_step_is_deterministic():
+    cfg = get_config("tinyllama-1.1b").reduced()
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    caches = transformer.init_decode_state(cfg, 2, 16)
+    step = make_serve_step(cfg)
+    tok = jnp.asarray([1, 2], jnp.int32)
+    n1, l1, _ = step(params, caches, jnp.asarray(0, jnp.int32), tok)
+    n2, l2, _ = step(params, caches, jnp.asarray(0, jnp.int32), tok)
+    assert np.array_equal(np.asarray(n1), np.asarray(n2))
+
+
+# ------------------------------------------------------- ring-buffer caches
+
+def test_cache_slot_full_cache_identity():
+    idx = jnp.asarray(7, jnp.int32)
+    assert int(cache_slot(idx, 100, 0, 0)) == 7
+
+
+def test_cache_slot_ring_with_prefix():
+    cap, window, prefix = 8, 6, 2
+    # prefix positions pinned
+    assert int(cache_slot(jnp.asarray(0), cap, window, prefix)) == 0
+    assert int(cache_slot(jnp.asarray(1), cap, window, prefix)) == 1
+    # ring wraps over the remaining 6 slots
+    slots = [int(cache_slot(jnp.asarray(p), cap, window, prefix))
+             for p in range(2, 14)]
+    assert slots[:6] == [2, 3, 4, 5, 6, 7]
+    assert slots[6:] == [2, 3, 4, 5, 6, 7]       # wrapped
+
+
+def test_cache_fill_matches_incremental_updates():
+    """Bulk cache_fill == sequence of cache_update calls (windowed)."""
+    b, s, kv, dh, window = 1, 12, 2, 4, 6
+    cap = window
+    rng = np.random.default_rng(0)
+    k = jnp.asarray(rng.normal(size=(b, s, kv, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, kv, dh)), jnp.float32)
+    bulk = cache_fill(init_cache(b, cap, kv, dh, jnp.float32), k, v,
+                      window=window, prefix=0)
+    inc = init_cache(b, cap, kv, dh, jnp.float32)
+    for t in range(s):
+        inc = cache_update(inc, k[:, t:t + 1], v[:, t:t + 1],
+                           jnp.asarray(t, jnp.int32), window=window)
+    np.testing.assert_allclose(np.asarray(bulk["k"]), np.asarray(inc["k"]),
+                               rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(bulk["pos"]),
+                                  np.asarray(inc["pos"]))
+
+
+def test_whisper_greedy_decode():
+    cfg = get_config("whisper-large-v3").reduced()
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+    frames = jnp.asarray(rng.normal(0, 1, (1, cfg.enc_seq, cfg.d_model)),
+                         jnp.float32)
+    prompt = jnp.asarray([[5, 9, 2]], jnp.int32)
+    out = greedy_decode(params, cfg, prompt, 3, extra_embeds=frames)
+    assert out.shape == (1, 3)

@@ -1,0 +1,80 @@
+"""End-to-end TreeCSS pipeline: the paper's four framework variants."""
+import numpy as np
+import pytest
+
+from conftest import make_cls_partition
+from repro.core import SplitNNConfig, run_pipeline
+from repro.core.vcoreset import vcoreset
+
+
+@pytest.fixture(scope="module")
+def parts():
+    full = make_cls_partition(n=950, d=12, seed=0)
+    import numpy as np
+    rows = np.random.default_rng(1).permutation(950)
+    return full.take(rows[:700]), full.take(rows[700:])
+
+
+CFG = SplitNNConfig(model="lr", n_classes=2, lr=0.05, batch_size=64,
+                    max_epochs=50)
+
+
+def test_all_variants_accuracy_and_reduction(parts):
+    tr, te = parts
+    reports = {}
+    for variant in ("starall", "treeall", "starcss", "treecss"):
+        reports[variant] = run_pipeline(tr, te, CFG, variant=variant,
+                                        clusters_per_client=8, seed=0)
+    # coreset variants train on (much) less data
+    assert reports["treecss"].n_train < reports["treeall"].n_train
+    assert reports["starcss"].n_train < reports["starall"].n_train
+    # comparable accuracy: within 5 points of full-data training
+    assert (reports["treecss"].metric
+            >= reports["starall"].metric - 0.05)
+    # CSS must reduce the instance-wise training communication
+    assert (reports["treecss"].train.comm_bytes
+            < reports["treeall"].train.comm_bytes)
+
+
+def test_weighting_toggle(parts):
+    tr, te = parts
+    w_on = run_pipeline(tr, te, CFG, variant="treecss",
+                        clusters_per_client=6, use_weights=True, seed=0)
+    w_off = run_pipeline(tr, te, CFG, variant="treecss",
+                         clusters_per_client=6, use_weights=False, seed=0)
+    assert w_on.n_train == w_off.n_train
+    assert w_on.metric >= 0.8 and w_off.metric >= 0.8
+
+
+def test_knn_pipeline(parts):
+    tr, te = parts
+    cfg = SplitNNConfig(model="knn", n_classes=2)
+    rep = run_pipeline(tr, te, cfg, variant="treecss",
+                       clusters_per_client=8, seed=0)
+    assert rep.metric > 0.85
+
+
+def test_vcoreset_baseline_comparison(parts):
+    """Fig. 6: at the same coreset size, Cluster-Coreset should be at
+    least competitive with leverage-score V-coreset."""
+    tr, te = parts
+    rep = run_pipeline(tr, te, CFG, variant="treecss",
+                       clusters_per_client=8, seed=0)
+    size = rep.n_train
+    idx, w = vcoreset(tr, size, seed=0)
+    from repro.core.splitnn import evaluate, train_splitnn
+    sub = tr.take(idx)
+    vrep = train_splitnn(sub, CFG, sample_weights=w)
+    v_metric = evaluate(vrep.params, CFG, te)
+    assert rep.metric >= v_metric - 0.08
+
+
+def test_pipeline_reports_stage_times(parts):
+    tr, te = parts
+    rep = run_pipeline(tr, te, CFG, variant="treecss",
+                       clusters_per_client=4, seed=0)
+    assert rep.align_seconds > 0
+    assert rep.coreset_seconds > 0
+    assert rep.train_seconds > 0
+    assert rep.total_seconds == pytest.approx(
+        rep.align_seconds + rep.coreset_seconds + rep.train_seconds)
