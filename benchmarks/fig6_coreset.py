@@ -1,15 +1,23 @@
 """Fig. 6 — Cluster-Coreset (TreeCSS) vs V-coreset at MATCHED coreset
-sizes, classification (accuracy) and regression (MSE).
+sizes, classification (accuracy) and regression (MSE) — plus the CSS
+k-means engine microbenchmark (seed one-hot Lloyd vs the fused
+kmeans_update path) at N up to 10⁶.
 
 Paper claims: under the same coreset size, TreeCSS tests better than
 V-coreset; data-volume reduction up to 98.4% (RI).
 """
 from __future__ import annotations
 
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import dataset_partitions, emit, fmt
 from repro.core import SplitNNConfig, cluster_coreset
+from repro.core.kmeans import _assign, kmeans_fit, kmeans_pp_init
 from repro.core.splitnn import evaluate, train_splitnn
 from repro.core.vcoreset import vcoreset
 
@@ -49,6 +57,77 @@ def run(quick: bool = True):
                         if ((ours >= theirs) if n_classes else
                             (ours <= theirs)) else "vcoreset")))
     emit(rows, "fig6_coreset")
+    run_kmeans_perf(quick=quick)
+
+
+# ------------------------------------------------------ CSS k-means engine
+
+@functools.partial(jax.jit, static_argnames=("k", "iters", "impl"))
+def _fit_onehot(key, points, k: int, *, iters: int, impl: str):
+    """The SEED Lloyd loop: assign (ref or pallas kernel), then an (N, K)
+    one-hot materialization + dense one_hot.T @ points per iteration.
+    Kept here as the benchmark baseline the fused kernel replaces."""
+    points = points.astype(jnp.float32)
+    centroids = kmeans_pp_init(key, points, k)
+
+    def step(carry, _):
+        cents, rk = carry
+        assign, sqd = _assign(points, cents, impl)
+        one_hot = jax.nn.one_hot(assign, k, dtype=jnp.float32)   # (N,K)
+        counts = jnp.sum(one_hot, axis=0)
+        sums = one_hot.T @ points
+        new_cents = sums / jnp.maximum(counts, 1.0)[:, None]
+        far = points[jnp.argmax(sqd)]
+        new_cents = jnp.where((counts > 0)[:, None], new_cents, far[None])
+        return (new_cents, rk), jnp.sum(sqd)
+
+    (centroids, _), _ = jax.lax.scan(step, (centroids, key), None,
+                                     length=iters)
+    assign, sqd = _assign(points, centroids, impl)
+    return centroids, assign, sqd
+
+
+def _time_fit(fn, key, pts, k, iters, impl, reps=3):
+    out = fn(key, pts, k, iters=iters, impl=impl)   # compile + warm cache
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(key, pts, k, iters=iters, impl=impl))
+    return (time.perf_counter() - t0) / reps
+
+
+def run_kmeans_perf(quick: bool = True, sizes=None):
+    """Per-client CSS fit wall-clock: seed one-hot Lloyd (ref assign /
+    pallas assign) vs the fused kmeans_update path (segment_sum ref /
+    pallas fused). Same key → identical clusterings; only the engine
+    changes."""
+    sizes = sizes or ([30_000, 100_000] if quick else [100_000, 1_000_000])
+    d, k, iters = 16, 16, 5
+    from repro.kernels.padding import INTERPRET
+    # NOTE: with INTERPRET=1 (CPU container) the pallas variants run the
+    # Pallas *emulator* and their wall-clock is meaningless as a TPU proxy;
+    # the ref-vs-ref rows isolate the one-hot -> fused algorithmic change,
+    # the pallas rows become meaningful with REPRO_PALLAS_INTERPRET=0.
+    rows = []
+    variants = [
+        ("onehot-ref", _fit_onehot, "ref"),          # seed baseline
+        ("onehot-pallas-assign", _fit_onehot, "pallas"),
+        ("fused-ref", kmeans_fit, "ref"),
+        ("fused-pallas", kmeans_fit, "pallas"),
+    ]
+    for n in sizes:
+        pts = jnp.asarray(np.random.default_rng(0).normal(size=(n, d)),
+                          jnp.float32)
+        key = jax.random.PRNGKey(0)
+        base = None
+        for name, fn, impl in variants:
+            secs = _time_fit(fn, key, pts, k, iters, impl)
+            base = base if base is not None else secs
+            rows.append(dict(n=n, d=d, k=k, iters=iters, variant=name,
+                             seconds=fmt(secs, 4),
+                             speedup_vs_onehot_ref=fmt(base / secs, 2),
+                             pallas_interpret=int(INTERPRET)))
+    emit(rows, "fig6_kmeans_perf")
 
 
 if __name__ == "__main__":

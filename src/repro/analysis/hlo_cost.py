@@ -44,6 +44,26 @@ _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 _PARAM_RE = re.compile(r"([\w.\-]+):\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[\d,]*\][^,)]*))")
 
 
+def _split_top_commas(s: str) -> List[str]:
+    """Split on commas not nested in []/{}/() — shape dims contain commas."""
+    out: List[str] = []
+    depth = 0
+    cur: List[str] = []
+    for ch in s:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    return out
+
+
 def _shapes_in(text: str) -> List[Tuple[str, List[int]]]:
     out = []
     for dt, dims in _SHAPE_RE.findall(text):
@@ -150,22 +170,33 @@ def analyze_hlo(hlo_text: str) -> Dict[str, float]:
         out_elems = _nelems(out_shapes)
         out_bytes = _nbytes(out_shapes)
 
-        # operand names: inside the first top-level paren group
+        # operands: inside the first top-level paren group. Depending on
+        # the HLO printer version a token is either a bare name
+        # ("%Arg_0.1") or shape-annotated ("f32[128,256]{1,0} %Arg_0.1");
+        # prefer the inline shape, fall back to the symbol table.
         after = raw[raw.index(opcode + "(") + len(opcode) + 1:]
         operand_frag = after.split(")")[0]
-        operand_names = [t.strip().lstrip("%") for t in operand_frag.split(",")
-                         if t.strip().startswith("%")
-                         or re.match(r"\s*[\w.\-]+\s*$", t)]
         local = symtab.get(cur_name, {})
+        per_operand: List[List[Tuple[str, List[int]]]] = []
+        for tok in _split_top_commas(operand_frag):
+            tok = tok.strip()
+            if not tok:
+                continue
+            inline = _shapes_in(tok)
+            if inline:
+                per_operand.append(inline)
+                continue
+            nm = re.search(r"%?([\w.\-]+)\s*$", tok)
+            per_operand.append(local.get(nm.group(1), []) if nm else [])
         operand_shapes: List[Tuple[str, List[int]]] = []
-        for on in operand_names:
-            operand_shapes += local.get(on, [])
+        for shp in per_operand:
+            operand_shapes += shp
         operand_bytes = _nbytes(operand_shapes)
 
         if opcode == "dot":
             k = 1
             cm = _CONTRACT_RE.search(raw)
-            lhs = local.get(operand_names[0], []) if operand_names else []
+            lhs = per_operand[0] if per_operand else []
             if cm and lhs:
                 lhs_dims = lhs[0][1]
                 for idx in (int(x) for x in cm.group(1).split(",") if x):

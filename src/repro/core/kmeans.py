@@ -1,11 +1,13 @@
 """K-Means (Lloyd) in JAX — the Cluster-Coreset compute hot-spot.
 
-The distance/assign step is the O(N·K·d) inner loop the paper's coreset
-construction spends its FLOPs on; it is pluggable between the pure-jnp
-reference (``repro.kernels.kmeans_assign.ref``) and the Pallas TPU kernel
-(``repro.kernels.kmeans_assign.ops``). k-means++ seeding, empty-cluster
-re-seeding to the farthest point, fixed-iteration lax.while loop with an
-inertia-based early stop.
+The per-iteration work is the fused update step (distance + argmin +
+per-cluster sum/count), pluggable between the jnp ``segment_sum``
+reference (``repro.kernels.kmeans_update.ref``) and the fused Pallas TPU
+kernel (``repro.kernels.kmeans_update.ops``) in which the point tile
+never leaves VMEM between assign and accumulate — no (N, K) one-hot is
+materialized on either path. The final assign-only pass reuses the
+lighter ``kmeans_assign`` kernel. k-means++ seeding, empty-cluster
+re-seeding to the farthest point, fixed-iteration scan.
 """
 from __future__ import annotations
 
@@ -23,6 +25,15 @@ def _assign(points, centroids, impl: str):
         return ops.kmeans_assign(points, centroids)
     from repro.kernels.kmeans_assign import ref
     return ref.kmeans_assign(points, centroids)
+
+
+def _update(points, centroids, impl: str):
+    """Fused Lloyd update: (assign (N,), sqd (N,), sums (K,d), counts (K,))."""
+    if impl == "pallas":
+        from repro.kernels.kmeans_update import ops
+        return ops.kmeans_update(points, centroids)
+    from repro.kernels.kmeans_update import ref
+    return ref.kmeans_update(points, centroids)
 
 
 def kmeans_pp_init(key, points: jnp.ndarray, k: int) -> jnp.ndarray:
@@ -59,10 +70,7 @@ def kmeans_fit(key, points: jnp.ndarray, k: int, *, iters: int = 25,
 
     def step(carry, _):
         cents, rk = carry
-        assign, sqd = _assign(points, cents, impl)
-        one_hot = jax.nn.one_hot(assign, k, dtype=jnp.float32)   # (N,K)
-        counts = jnp.sum(one_hot, axis=0)                        # (K,)
-        sums = one_hot.T @ points                                # (K,d)
+        _, sqd, sums, counts = _update(points, cents, impl)
         new_cents = sums / jnp.maximum(counts, 1.0)[:, None]
         # empty clusters: re-seed at the globally farthest point
         far = points[jnp.argmax(sqd)]
@@ -114,12 +122,9 @@ def kmeans_minibatch_fit(key, points: jnp.ndarray, k: int, *,
         cents, counts = carry
         idx = jax.random.randint(key_i, (batch,), 0, n)
         pts = points[idx]
-        assign, _ = _assign(pts, cents, impl)
-        one_hot = jax.nn.one_hot(assign, k, dtype=jnp.float32)   # (B,K)
-        batch_counts = jnp.sum(one_hot, axis=0)                  # (K,)
+        _, _, sums, batch_counts = _update(pts, cents, impl)
         new_counts = counts + batch_counts
         # per-center learning rate 1/count (Sculley eq. 1)
-        sums = one_hot.T @ pts                                   # (K,d)
         target = sums / jnp.maximum(batch_counts, 1.0)[:, None]
         lr = batch_counts / jnp.maximum(new_counts, 1.0)
         cents = cents + lr[:, None] * (target - cents) * (

@@ -91,13 +91,15 @@ def run_pipeline(train_part: VerticalPartition,
     coreset_res = None
     weights = None
     if use_css:
-        # warm the kmeans jit cache on the exact shapes so stage timing
-        # compares protocols, not XLA compilation (paid once per shape)
-        for f in aligned.client_features:
-            from repro.core.kmeans import kmeans as _km
-            _km(f, min(clusters_per_client, f.shape[0]), seed=seed,
-                impl=kmeans_impl)
-    if use_css:
+        from repro.core.coreset import clients_batchable
+        if not clients_batchable(aligned.client_features):
+            # sequential path: warm the kmeans jit cache on the exact
+            # shapes so stage timing compares protocols, not XLA
+            # compilation (the batched path AOT-compiles internally)
+            for f in aligned.client_features:
+                from repro.core.kmeans import kmeans as _km
+                _km(f, min(clusters_per_client, f.shape[0]), seed=seed,
+                    impl=kmeans_impl)
         coreset_res = cluster_coreset(
             aligned, clusters_per_client, seed=seed, kmeans_impl=kmeans_impl)
         train_data = aligned.take(coreset_res.indices)

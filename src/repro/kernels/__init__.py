@@ -1,6 +1,9 @@
 """Pallas TPU kernels for the framework's compute hot-spots.
 
-  kmeans_assign   — fused K-Means distance+argmin (Cluster-Coreset hot loop)
+  kmeans_assign   — fused K-Means distance+argmin (final assign pass)
+  kmeans_update   — fused Lloyd update: distance+argmin+per-cluster
+                    sum/count accumulation in one pass, the point tile
+                    resident in VMEM (Cluster-Coreset hot loop)
   flash_attention — online-softmax GQA attention (SplitNN LLM train/serve)
   ssd_scan        — Mamba2 SSD chunked scan with VMEM-carried state
 

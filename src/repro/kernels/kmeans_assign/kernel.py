@@ -28,11 +28,12 @@ def _assign_kernel(k_real: int, points_ref, cents_ref, assign_ref, dist_ref):
     cross = jax.lax.dot_general(p, c, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
     d2 = p2 - 2.0 * cross + c2                            # (BN,Kp)
-    kp = d2.shape[1]
     col = jax.lax.broadcasted_iota(jnp.int32, d2.shape, 1)
-    d2 = jnp.where(col < k_real, d2, MASK_LARGE)
+    # clamp BEFORE the argmin (matching the ref oracle): cancellation can
+    # leave tiny negatives whose ordering would otherwise flip ties
+    d2 = jnp.where(col < k_real, jnp.maximum(d2, 0.0), MASK_LARGE)
     assign_ref[...] = jnp.argmin(d2, axis=1).astype(jnp.int32)
-    dist_ref[...] = jnp.maximum(jnp.min(d2, axis=1), 0.0)
+    dist_ref[...] = jnp.min(d2, axis=1)
 
 
 def kmeans_assign_pallas(points: jnp.ndarray, centroids: jnp.ndarray, *,

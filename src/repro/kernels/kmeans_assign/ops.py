@@ -1,25 +1,18 @@
 """jit'd public wrapper for the kmeans_assign Pallas kernel.
 
-Pads N to the block size, d and K to 128 (MXU lane alignment), invokes the
-kernel, slices padding off. ``interpret=True`` on CPU (this container);
-on real TPU set ``REPRO_PALLAS_INTERPRET=0``.
+Pads via the shared k-means kernel layout (``repro.kernels.padding``),
+invokes the kernel, slices padding off.
 """
 from __future__ import annotations
 
 import functools
-import os
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.kmeans_assign.kernel import kmeans_assign_pallas
-
-INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
-
-
-def _round_up(x: int, m: int) -> int:
-    return ((x + m - 1) // m) * m
+from repro.kernels.padding import INTERPRET, pad_points_centroids
 
 
 @functools.partial(jax.jit, static_argnames=("block_n",))
@@ -28,12 +21,7 @@ def kmeans_assign(points: jnp.ndarray, centroids: jnp.ndarray, *,
     """points (N,d), centroids (K,d) -> (assign (N,) i32, sq_dist (N,) f32)."""
     n, d = points.shape
     k = centroids.shape[0]
-    bn = min(block_n, _round_up(n, 128))
-    np_, dp, kp = _round_up(n, bn), _round_up(d, 128), _round_up(k, 128)
-    p = jnp.zeros((np_, dp), jnp.float32).at[:n, :d].set(
-        points.astype(jnp.float32))
-    c = jnp.zeros((kp, dp), jnp.float32).at[:k, :d].set(
-        centroids.astype(jnp.float32))
+    p, c, bn = pad_points_centroids(points, centroids, block_n)
     assign, dist = kmeans_assign_pallas(p, c, k_real=k, block_n=bn,
                                         interpret=INTERPRET)
     return assign[:n], dist[:n]

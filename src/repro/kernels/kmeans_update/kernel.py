@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: fused K-Means Lloyd update — distance + argmin +
+per-cluster sum/count accumulation in ONE pass over the points.
+
+The seed pipeline ran assign as a kernel but then materialized an (N, K)
+one-hot in HBM and paid a second full read of the points for
+``one_hot.T @ points``. Here the (BN, d) point tile never leaves VMEM
+between the assign and the accumulate:
+
+  · d² = ‖p‖² − 2·P·Cᵀ + ‖c‖² on the MXU, argmin in VREGs (as in
+    ``kmeans_assign``),
+  · the tile's one-hot is rebuilt in VREGs from the argmin via an iota
+    compare — it is never written anywhere,
+  · tile partial sums (Kp, d) come from a second MXU matmul
+    one_hotᵀ·P against the SAME resident point tile; counts are a VPU
+    row-reduction,
+  · the (Kp, d) sums and (1, Kp) counts outputs map every grid step to
+    block (0, 0): the TPU grid is sequential, so Pallas keeps the block
+    resident in VMEM across steps (revisiting) and we accumulate with
+    ``+=`` after a first-step zero-init.
+
+HBM traffic per Lloyd iteration drops from N·d reads (assign) + N·K +
+N·d reads (one-hot update) to a single N·d read + O(K·d) write.
+
+Padding contract (enforced by ops.py): Np % block_n == 0, dp % 128 == 0,
+Kp % 128 == 0. Padded centroid columns are masked to +inf before the
+argmin; padded point rows (row index ≥ n_real) are masked OUT of the
+one-hot so they contribute to no cluster's sum/count.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+MASK_LARGE = 3.4e38  # python float: +inf stand-in for masked centroid columns
+
+
+def _update_kernel(k_real: int, n_real: int, block_n: int,
+                   points_ref, cents_ref,
+                   assign_ref, dist_ref, sums_ref, counts_ref):
+    i = pl.program_id(0)
+    p = points_ref[...]                       # (BN, d)   resident tile
+    c = cents_ref[...]                        # (Kp, d)
+    p2 = jnp.sum(p * p, axis=1, keepdims=True)            # (BN,1)
+    c2 = jnp.sum(c * c, axis=1)[None]                     # (1,Kp)
+    # MXU matmul #1: (BN,d) x (d,Kp)
+    cross = jax.lax.dot_general(p, c, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    d2 = p2 - 2.0 * cross + c2                            # (BN,Kp)
+    col = jax.lax.broadcasted_iota(jnp.int32, d2.shape, 1)
+    # clamp BEFORE the argmin (matching the ref oracle): cancellation can
+    # leave tiny negatives whose ordering would otherwise flip ties
+    d2 = jnp.where(col < k_real, jnp.maximum(d2, 0.0), MASK_LARGE)
+    assign = jnp.argmin(d2, axis=1).astype(jnp.int32)     # (BN,)
+    assign_ref[...] = assign
+    dist_ref[...] = jnp.min(d2, axis=1)
+
+    # one-hot rebuilt in VREGs; padded rows masked out of the accumulation
+    row = i * block_n + jax.lax.broadcasted_iota(jnp.int32, d2.shape, 0)
+    one_hot = jnp.where((col == assign[:, None]) & (row < n_real),
+                        1.0, 0.0).astype(jnp.float32)     # (BN,Kp)
+    # MXU matmul #2 against the SAME resident tile: (Kp,BN) x (BN,d)
+    tile_sums = jax.lax.dot_general(one_hot, p, (((0,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+    tile_counts = jnp.sum(one_hot, axis=0)[None]          # (1,Kp)
+
+    @pl.when(i == 0)
+    def _():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    sums_ref[...] += tile_sums
+    counts_ref[...] += tile_counts
+
+
+def kmeans_update_pallas(points: jnp.ndarray, centroids: jnp.ndarray, *,
+                         k_real: int, n_real: int, block_n: int = 1024,
+                         interpret: bool = True):
+    """points (Np, dp) f32 (padded), centroids (Kp, dp) f32 (padded).
+
+    Np % block_n == 0; dp % 128 == 0; Kp % 128 == 0. Returns
+    (assign (Np,) i32, sq_dist (Np,) f32, sums (Kp, dp) f32,
+    counts (1, Kp) f32) — caller slices off padding.
+    """
+    n, d = points.shape
+    kp = centroids.shape[0]
+    assert n % block_n == 0 and d % 128 == 0 and kp % 128 == 0, (n, d, kp)
+    grid = (n // block_n,)
+    kernel = functools.partial(_update_kernel, k_real, n_real, block_n)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),   # point tile
+            pl.BlockSpec((kp, d), lambda i: (0, 0)),        # all centroids
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((kp, d), lambda i: (0, 0)),        # revisited accum
+            pl.BlockSpec((1, kp), lambda i: (0, 0)),        # revisited accum
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((kp, d), jnp.float32),
+            jax.ShapeDtypeStruct((1, kp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(points, centroids)

@@ -1,0 +1,32 @@
+"""jit'd public wrapper for the fused kmeans_update Pallas kernel.
+
+Pads via the shared k-means kernel layout (``repro.kernels.padding``),
+invokes the fused assign+accumulate kernel, slices padding off. Padded
+point rows are masked out of the per-cluster sums/counts inside the
+kernel, so the sliced outputs are exact.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kmeans_update.kernel import kmeans_update_pallas
+from repro.kernels.padding import INTERPRET, pad_points_centroids
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def kmeans_update(points: jnp.ndarray, centroids: jnp.ndarray, *,
+                  block_n: int = 1024
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
+                             jnp.ndarray]:
+    """points (N,d), centroids (K,d) ->
+    (assign (N,) i32, sq_dist (N,) f32, sums (K,d) f32, counts (K,) f32)."""
+    n, d = points.shape
+    k = centroids.shape[0]
+    p, c, bn = pad_points_centroids(points, centroids, block_n)
+    assign, dist, sums, counts = kmeans_update_pallas(
+        p, c, k_real=k, n_real=n, block_n=bn, interpret=INTERPRET)
+    return assign[:n], dist[:n], sums[:k, :d], counts[0, :k]

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the fused K-Means Lloyd update step.
+
+Assign via the kmeans_assign oracle, then per-cluster sums/counts via
+``jax.ops.segment_sum`` — no (N, K) one-hot is materialized even in the
+reference, so ``impl="ref"`` is itself faster than the seed's
+``one_hot.T @ points`` formulation.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kmeans_assign import ref as assign_ref
+
+
+def kmeans_update(points: jnp.ndarray, centroids: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
+                             jnp.ndarray]:
+    """points (N,d) f32, centroids (K,d) f32 ->
+    (assign (N,) i32, sq_dist (N,) f32, sums (K,d) f32, counts (K,) f32)."""
+    k = centroids.shape[0]
+    assign, sqd = assign_ref.kmeans_assign(points, centroids)
+    sums = jax.ops.segment_sum(points.astype(jnp.float32), assign,
+                               num_segments=k)
+    counts = jax.ops.segment_sum(jnp.ones(points.shape[0], jnp.float32),
+                                 assign, num_segments=k)
+    return assign, sqd, sums, counts

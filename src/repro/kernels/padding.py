@@ -1,0 +1,41 @@
+"""Shared padding/layout contract for the k-means Pallas kernels.
+
+Both ``kmeans_assign`` and ``kmeans_update`` tile points over an N grid
+and keep all centroids resident: N pads to the block size, d and K pad
+to 128 (MXU lane alignment). One definition here so the contract — and
+the interpret-mode switch — cannot silently diverge between kernels.
+"""
+from __future__ import annotations
+
+import os
+from typing import Tuple
+
+import jax.numpy as jnp
+
+# interpret=True on CPU (this container); on real TPU set
+# REPRO_PALLAS_INTERPRET=0 to compile the kernels with Mosaic.
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def pad_points_centroids(points: jnp.ndarray, centroids: jnp.ndarray,
+                         block_n: int
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray, int]:
+    """Zero-pad (N,d) points / (K,d) centroids to the kernel layout.
+
+    Returns (points (Np,dp) f32, centroids (Kp,dp) f32, bn) with
+    Np % bn == 0 and dp, Kp multiples of 128, where bn is block_n
+    shrunk to the padded N for small inputs.
+    """
+    n, d = points.shape
+    k = centroids.shape[0]
+    bn = min(block_n, round_up(n, 128))
+    np_, dp, kp = round_up(n, bn), round_up(d, 128), round_up(k, 128)
+    p = jnp.zeros((np_, dp), jnp.float32).at[:n, :d].set(
+        points.astype(jnp.float32))
+    c = jnp.zeros((kp, dp), jnp.float32).at[:k, :d].set(
+        centroids.astype(jnp.float32))
+    return p, c, bn

@@ -19,7 +19,16 @@ import jax
 import jax.numpy as jnp
 
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+try:  # jax >= 0.6: graduated to the top-level namespace
+    from jax import shard_map
+except ImportError:
+    from jax.experimental.shard_map import shard_map
+
+# the replication-check kwarg was renamed check_rep -> check_vma in jax 0.6
+import inspect as _inspect
+_SHARD_MAP_NO_CHECK = {
+    ("check_vma" if "check_vma" in _inspect.signature(shard_map).parameters
+     else "check_rep"): False}
 
 from repro.configs.base import MoEConfig
 from repro.models.layers import dense_init
@@ -328,6 +337,6 @@ def moe_forward_ep(params, x, moe: MoEConfig, mesh
                   wo_spec,                             # wo
                   x_spec),
         out_specs=(x_spec, P()),
-        check_vma=False,
+        **_SHARD_MAP_NO_CHECK,
     )(params["router"], wi_gate, wi_up, wo, x)
     return out

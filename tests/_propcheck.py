@@ -1,0 +1,89 @@
+"""Vendored micro property-testing shim — the ``hypothesis`` subset this
+suite uses (``given`` / ``settings`` / ``strategies.{integers,floats,
+lists,sets}``), for environments without the real package.
+
+Draws are DETERMINISTIC: each example seeds a private ``random.Random``
+from crc32(test name) + example index, so failures reproduce exactly and
+runs are stable across processes (no PYTHONHASHSEED dependence). No
+shrinking, no database — when real hypothesis is installed the test
+modules import it instead (see their try/except headers).
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+from typing import Any, Callable
+
+
+class _Strategy:
+    """A strategy is just a seeded-draw function."""
+
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+
+class strategies:  # noqa: N801 — mirrors `hypothesis.strategies` module
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def lists(elements: _Strategy, *, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        def draw(rng):
+            size = rng.randint(min_size, max_size)
+            return [elements._draw(rng) for _ in range(size)]
+        return _Strategy(draw)
+
+    @staticmethod
+    def sets(elements: _Strategy, *, min_size: int = 0,
+             max_size: int = 10) -> _Strategy:
+        def draw(rng):
+            size = rng.randint(min_size, max_size)
+            out = set()
+            for _ in range(8 * max(size, 1)):      # bounded retry on dups
+                if len(out) >= size:
+                    break
+                out.add(elements._draw(rng))
+            return out
+        return _Strategy(draw)
+
+
+st = strategies
+
+
+def settings(max_examples: int = 20, deadline=None, **_ignored):
+    """Records max_examples on the (already ``given``-wrapped) test."""
+    def deco(fn):
+        fn._pc_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats: _Strategy):
+    """Runs the test once per example with freshly drawn arguments."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n_examples = getattr(wrapper, "_pc_max_examples", 20)
+            base = zlib.crc32(fn.__qualname__.encode())
+            for i in range(n_examples):
+                rng = random.Random(base + i)
+                vals = [s._draw(rng) for s in strats]
+                try:
+                    fn(*args, *vals, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"propcheck example {i}/{n_examples} failed with "
+                        f"arguments {vals!r}") from e
+        # pytest must not see the drawn parameters as fixtures
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return deco

@@ -1,7 +1,10 @@
 """Cluster-Coreset: weighting formula, CT grouping, selection invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container image has no hypothesis
+    from _propcheck import given, settings, strategies as st
 
 from conftest import make_cls_partition
 from repro.core.coreset import (ClientClustering, cluster_coreset,

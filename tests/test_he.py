@@ -1,6 +1,9 @@
 """Paillier HE: roundtrip, homomorphic ops, fixed-point packing."""
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container image has no hypothesis
+    from _propcheck import given, settings, strategies as st
 
 from repro.core import he
 

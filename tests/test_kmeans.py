@@ -1,7 +1,10 @@
 """JAX K-Means: convergence, empty-cluster handling, impl parity."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container image has no hypothesis
+    from _propcheck import given, settings, strategies as st
 
 from repro.core.kmeans import kmeans
 

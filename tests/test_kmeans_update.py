@@ -1,0 +1,150 @@
+"""Fused kmeans_update kernel: pallas vs segment_sum ref parity on ragged
+shapes, empty-cluster re-seed behavior, batched coreset equivalence, and
+end-to-end fused-vs-ref convergence properties."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container image has no hypothesis
+    from _propcheck import given, settings, strategies as st
+
+from conftest import make_cls_partition
+from repro.core.coreset import cluster_coreset, rank_weights
+from repro.core.kmeans import kmeans, kmeans_fit
+from repro.kernels.kmeans_update import ops as up_ops, ref as up_ref
+
+# ------------------------------------------------------------- kernel parity
+
+@pytest.mark.parametrize("n,d,k", [
+    (64, 8, 4),         # aligned-ish small
+    (100, 11, 8),       # N, d, K all ragged
+    (1000, 32, 16),     # N not a multiple of block_n
+    (257, 7, 3),        # prime N
+    (64, 190, 32),      # d > 128
+    (128, 128, 130),    # K > 128 (two lane groups)
+    (33, 1, 2),         # d = 1
+    (5, 3, 8),          # K > N edge
+    (2500, 16, 16),     # multi-tile grid accumulation
+])
+def test_update_matches_ref(n, d, k):
+    rng = np.random.default_rng((n, d, k))      # per-case, order-free
+    p = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(k, d)), jnp.float32)
+    a_ref, d_ref, s_ref, n_ref = up_ref.kmeans_update(p, c)
+    a_pal, d_pal, s_pal, n_pal = up_ops.kmeans_update(p, c)
+    assert np.array_equal(np.asarray(a_ref), np.asarray(a_pal))
+    np.testing.assert_allclose(np.asarray(d_ref), np.asarray(d_pal),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_ref), np.asarray(s_pal),
+                               rtol=1e-4, atol=1e-4)
+    # counts are exact integers on both paths
+    np.testing.assert_array_equal(np.asarray(n_ref), np.asarray(n_pal))
+    assert float(jnp.sum(n_pal)) == n   # padded rows contribute nothing
+
+
+def test_update_sums_decompose_by_cluster():
+    """Per-cluster sums from the fused kernel == brute-force masked sums."""
+    rng = np.random.default_rng(42)
+    p = jnp.asarray(rng.normal(size=(300, 10)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(7, 10)), jnp.float32)
+    a, _, sums, counts = up_ops.kmeans_update(p, c)
+    a, sums, counts = np.asarray(a), np.asarray(sums), np.asarray(counts)
+    for j in range(7):
+        np.testing.assert_allclose(sums[j], np.asarray(p)[a == j].sum(0),
+                                   rtol=1e-4, atol=1e-4)
+        assert counts[j] == (a == j).sum()
+
+
+def test_update_batched_vmap():
+    rng = np.random.default_rng(43)
+    pb = jnp.asarray(rng.normal(size=(4, 260, 9)), jnp.float32)
+    cb = jnp.asarray(rng.normal(size=(4, 5, 9)), jnp.float32)
+    a, d, s, n = jax.vmap(up_ops.kmeans_update)(pb, cb)
+    for i in range(4):
+        a1, d1, s1, n1 = up_ref.kmeans_update(pb[i], cb[i])
+        assert np.array_equal(np.asarray(a[i]), np.asarray(a1))
+        np.testing.assert_allclose(np.asarray(s[i]), np.asarray(s1),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------- empty-cluster re-seed
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_empty_cluster_reseed(impl):
+    """K far exceeds the number of distinct points: surplus centroids must
+    re-seed (to the farthest point) rather than go NaN, and the fit must
+    stay finite with every sample within float distance of a centroid."""
+    base = np.array([[0.0, 0.0], [10.0, 10.0], [-10.0, 5.0]], np.float32)
+    x = np.repeat(base, 5, axis=0)                       # 3 distinct, N=15
+    cents, assign, sqd = kmeans(x, 9, seed=0, iters=10, impl=impl)
+    assert np.isfinite(cents).all()
+    assert np.isfinite(sqd).all()
+    assert sqd.max() < 1e-3          # every sample sits on some centroid
+    assert assign.min() >= 0 and assign.max() < 9
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_fit_recovers_blobs(impl):
+    rng = np.random.default_rng(5)
+    x = np.concatenate([rng.normal(i * 8.0, 0.5, (80, 6))
+                        for i in range(4)]).astype(np.float32)
+    _, assign, _ = kmeans(x, 4, seed=1, impl=impl)
+    for i in range(4):
+        assert len(np.unique(assign[i * 80:(i + 1) * 80])) == 1
+
+
+# ------------------------------------------------------ end-to-end parity
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(30, 300), st.integers(2, 10), st.integers(1, 20),
+       st.integers(0, 1000))
+def test_property_fused_and_ref_fits_agree(n, k, d, seed):
+    """From the same key, the fused-pallas fit and the ref fit converge to
+    identical assignments (numerics differ only in summation order)."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    k = min(k, n)
+    c_ref, a_ref, d_ref = kmeans(x, k, seed=seed, iters=15, impl="ref")
+    c_pal, a_pal, d_pal = kmeans(x, k, seed=seed, iters=15, impl="pallas")
+    assert np.array_equal(a_ref, a_pal)
+    np.testing.assert_allclose(c_ref, c_pal, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(d_ref, d_pal, rtol=1e-3, atol=1e-3)
+
+
+def test_batched_coreset_matches_sequential():
+    """The vmap'd multi-client path must select the SAME coreset as the
+    sequential host loop, on both impls."""
+    part = make_cls_partition(n=240, d=12, clients=3, seed=7)
+    seq = cluster_coreset(part, 5, seed=3, batch_clients="never")
+    assert not seq.batched
+    for impl in ("ref", "pallas"):
+        bat = cluster_coreset(part, 5, seed=3, kmeans_impl=impl)
+        assert bat.batched                          # fused device call
+        # makespan model: one concurrent-client share per client
+        assert len(bat.per_client_seconds) == part.n_clients
+        assert len(set(bat.per_client_seconds)) == 1
+        assert np.array_equal(bat.indices, seq.indices)
+        np.testing.assert_allclose(bat.weights, seq.weights, atol=1e-5)
+
+
+def test_rank_weights_matches_per_cluster_loop():
+    """Vectorized lexsort ranking == the per-cluster python loop it
+    replaced (including stable tie-breaks on duplicate distances)."""
+    rng = np.random.default_rng(3)
+    for _ in range(20):
+        n, k = int(rng.integers(1, 150)), int(rng.integers(1, 9))
+        assign = rng.integers(0, k, n).astype(np.int32)
+        sqd = np.round(rng.random(n), 2).astype(np.float32)  # force ties
+        ed = np.sqrt(sqd)
+        expect = np.zeros(n, np.float64)
+        for c in range(k):
+            members = np.nonzero(assign == c)[0]
+            if members.size == 0:
+                continue
+            order = members[np.argsort(-ed[members], kind="stable")]
+            expect[order] = np.arange(1, order.size + 1) / order.size
+        np.testing.assert_allclose(rank_weights(assign, sqd, k),
+                                   expect.astype(np.float32), rtol=1e-6)

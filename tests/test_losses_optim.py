@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container image has no hypothesis
+    from _propcheck import given, settings, strategies as st
 
 from repro.train.losses import (weighted_binary_xent, weighted_mse,
                                 weighted_softmax_xent)

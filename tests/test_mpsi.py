@@ -3,7 +3,10 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container image has no hypothesis
+    from _propcheck import given, settings, strategies as st
 
 from repro.core.mpsi import path_mpsi, star_mpsi, tree_mpsi
 from repro.data.synthetic import make_id_universe

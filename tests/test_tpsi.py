@@ -1,7 +1,10 @@
 """Two-party PSI: correctness, byte accounting, property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container image has no hypothesis
+    from _propcheck import given, settings, strategies as st
 
 from repro.core.tpsi import (default_rsa_key, rsa_keygen, run_tpsi,
                              tpsi_oprf, tpsi_rsa)
