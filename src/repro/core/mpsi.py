@@ -4,7 +4,7 @@ The host is single-machine, so concurrency is *simulated faithfully*: every
 round's wall time is the MAX over its concurrent TPSI pairs (tree), while
 path/star serialize where their topology forces it. Network time is modeled
 from the counted bytes at a configurable bandwidth/latency (paper cluster:
-10 Gbps), and compute time is the *measured* host crypto time of each TPSI.
+10 Gbps), and compute time is the *measured* crypto time of each TPSI.
 
 Tree-MPSI (paper steps 1-5):
   1/2. active clients request; scheduler pairs them,
@@ -17,6 +17,14 @@ Tree-MPSI (paper steps 1-5):
 Volume-aware scheduling (paper §4.1 "Scheduling optimization"):
   sort active clients by ResLen ascending → pair c_k with c_{k+⌈U/2⌉} →
   RSA: smaller side is receiver; OPRF: larger side is receiver.
+
+Backends (DESIGN.md §6): ``backend="host"`` runs every pair as its own
+host TPSI session.  ``backend="device"`` hands each ROUND's concurrent
+pairs to ``repro.psi.engine`` as ONE padded, vmapped device dispatch
+(tag-eval + sorted-merge intersect) — ⌈log2 m⌉ dispatches for the whole
+tree; RSA bigint signing stays on host per pair.  Byte/message/rounds
+accounting is backend-invariant (both use tpsi's accounting helpers on
+the same canonical sets); only the measured compute seconds change.
 """
 from __future__ import annotations
 
@@ -28,7 +36,11 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import he
-from repro.core.tpsi import ID_BYTES, TPSIResult, run_tpsi
+from repro.core.tpsi import (ID_BYTES, TPSIResult, canonical_ids,
+                             default_rsa_key, oprf_accounting,
+                             oprf_seed_words, oprf_session_rng,
+                             rsa_accounting, rsa_match_inputs,
+                             rsa_sign_stage, run_tpsi)
 
 DEFAULT_BANDWIDTH = 10e9 / 8     # 10 Gbps in bytes/s (paper's cluster)
 DEFAULT_LATENCY = 2e-4           # per message
@@ -41,9 +53,10 @@ class MPSIStats:
     total_bytes: int
     total_messages: int
     simulated_seconds: float       # makespan: compute + modeled network
-    compute_seconds: float         # sum of measured crypto time
+    compute_seconds: float         # sum of measured crypto/device time
     per_round_seconds: List[float]
     schedule: List[List[Tuple[int, int]]]   # per round: (sender, receiver)
+    device_dispatches: int = 0     # batched engine calls (device backend)
 
 
 def _net_time(bytes_: int, bandwidth: float, latency: float,
@@ -91,18 +104,79 @@ def _greedy_pairs(order: Sequence[int]) -> Tuple[List[Tuple[int, int]],
     return pairs, passthrough
 
 
+def _device_round(roles: List[Tuple[int, int]],
+                  holdings: Dict[int, np.ndarray], protocol: str,
+                  engine_impl: str, bandwidth: float, latency: float
+                  ) -> Tuple[List[np.ndarray], int, int, float, float]:
+    """Run one round's concurrent (sender, receiver) pairs as a single
+    batched engine dispatch.
+
+    Returns (per-pair intersections, round_bytes, round_messages,
+    round_compute_seconds, round_makespan_seconds).  Bytes/messages use
+    the same tpsi accounting helpers as the host backend.  The makespan
+    model: per-pair host crypto runs concurrently across clients (MAX),
+    the batched dispatch is one shared device step (its wall time), and
+    network is the MAX pair's modeled transfer — mirroring the host
+    backend's max-over-pairs round time.
+    """
+    from repro.psi import engine as psi_engine
+
+    senders = [holdings[s] for s, _ in roles]
+    receivers = [holdings[r] for _, r in roles]
+    host_secs: List[float] = []
+    net_secs: List[float] = []
+    round_bytes = round_msgs = 0
+
+    if protocol == "oprf":
+        rng = oprf_session_rng()
+        seeds = [oprf_seed_words(rng) for _ in roles]
+        eng = psi_engine.oprf_round(senders, receivers, seeds,
+                                    impl=engine_impl)
+        host_secs = [0.0] * len(roles)
+        for s_ids, r_ids in zip(senders, receivers):
+            b_s, b_r, msgs = oprf_accounting(len(s_ids), len(r_ids))
+            round_bytes += b_s + b_r
+            round_msgs += msgs
+            net_secs.append(_net_time(b_s + b_r, bandwidth, latency, msgs))
+    else:
+        key = default_rsa_key()
+        r_tags_l, r_vals_l, s_tags_l = [], [], []
+        for s_ids, r_ids in zip(senders, receivers):
+            t0 = time.perf_counter()
+            r_sigs, s_sigs, _, _ = rsa_sign_stage(key, s_ids, r_ids)
+            host_secs.append(time.perf_counter() - t0)
+            r_tags, r_vals, s_tags = rsa_match_inputs(r_ids, r_sigs, s_sigs)
+            r_tags_l.append(r_tags)
+            r_vals_l.append(r_vals)
+            s_tags_l.append(s_tags)
+            b_s, b_r, msgs = rsa_accounting(len(s_ids), len(r_ids), key)
+            round_bytes += b_s + b_r
+            round_msgs += msgs
+            net_secs.append(_net_time(b_s + b_r, bandwidth, latency, msgs))
+        eng = psi_engine.match_round(r_tags_l, r_vals_l, s_tags_l,
+                                     impl=engine_impl)
+
+    compute = sum(host_secs) + eng.device_seconds
+    makespan = (max(host_secs, default=0.0) + eng.device_seconds
+                + max(net_secs, default=0.0))
+    return eng.intersections, round_bytes, round_msgs, compute, makespan
+
+
 def tree_mpsi(id_sets: Sequence[np.ndarray], *, protocol: str = "rsa",
               volume_aware: bool = True,
               bandwidth: float = DEFAULT_BANDWIDTH,
               latency: float = DEFAULT_LATENCY,
-              use_he: bool = True) -> MPSIStats:
-    """Tree-MPSI over ``m`` id sets. O(log m) concurrent rounds."""
+              use_he: bool = True, backend: str = "host",
+              engine_impl: str = "pallas") -> MPSIStats:
+    """Tree-MPSI over ``m`` id sets. O(log m) concurrent rounds; with
+    backend="device", O(log m) batched engine dispatches total."""
     m = len(id_sets)
-    holdings: Dict[int, np.ndarray] = {i: np.asarray(s) for i, s in
+    holdings: Dict[int, np.ndarray] = {i: canonical_ids(s) for i, s in
                                        enumerate(id_sets)}
     active = list(range(m))
     total_bytes = total_msgs = 0
     compute = 0.0
+    dispatches = 0
     per_round: List[float] = []
     schedule: List[List[Tuple[int, int]]] = []
 
@@ -116,9 +190,7 @@ def tree_mpsi(id_sets: Sequence[np.ndarray], *, protocol: str = "rsa",
             pairs = [(order[2 * k], order[2 * k + 1])
                      for k in range(len(order) // 2)]
             passthrough = order[-1] if len(order) % 2 else None
-        round_sched: List[Tuple[int, int]] = []
-        round_times: List[float] = []
-        next_active: List[int] = []
+        roles: List[Tuple[int, int]] = []
         for a, b in pairs:
             la, lb = len(holdings[a]), len(holdings[b])
             small, big = (a, b) if la <= lb else (b, a)
@@ -129,19 +201,35 @@ def tree_mpsi(id_sets: Sequence[np.ndarray], *, protocol: str = "rsa",
             if not volume_aware:
                 # request order: earlier requester is sender (paper step 2)
                 sender, receiver = a, b
-            res = run_tpsi(protocol, holdings[sender], holdings[receiver])
-            holdings[receiver] = res.intersection
-            total_bytes += res.total_bytes
-            total_msgs += res.messages
-            compute += res.compute_seconds
-            round_times.append(_pair_time(res, bandwidth, latency))
-            round_sched.append((sender, receiver))
-            next_active.append(receiver)
+            roles.append((sender, receiver))
+
+        if backend == "device":
+            inters, r_bytes, r_msgs, r_compute, r_makespan = _device_round(
+                roles, holdings, protocol, engine_impl, bandwidth, latency)
+            for (sender, receiver), inter in zip(roles, inters):
+                holdings[receiver] = inter
+            total_bytes += r_bytes
+            total_msgs += r_msgs
+            compute += r_compute
+            dispatches += 1
+            per_round.append(r_makespan)
+        else:
+            round_times: List[float] = []
+            for sender, receiver in roles:
+                res = run_tpsi(protocol, holdings[sender],
+                               holdings[receiver])
+                holdings[receiver] = res.intersection
+                total_bytes += res.total_bytes
+                total_msgs += res.messages
+                compute += res.compute_seconds
+                round_times.append(_pair_time(res, bandwidth, latency))
+            per_round.append(max(round_times) if round_times else 0.0)
+
+        next_active = [receiver for _, receiver in roles]
         if passthrough is not None:
             next_active.append(passthrough)
         active = next_active
-        per_round.append(max(round_times) if round_times else 0.0)
-        schedule.append(round_sched)
+        schedule.append(roles)
 
     inter = holdings[active[0]]
     b_bytes, b_msgs, b_secs = _broadcast_result(
@@ -154,22 +242,27 @@ def tree_mpsi(id_sets: Sequence[np.ndarray], *, protocol: str = "rsa",
         intersection=inter, rounds=len(schedule),
         total_bytes=total_bytes, total_messages=total_msgs,
         simulated_seconds=sum(per_round), compute_seconds=compute,
-        per_round_seconds=per_round, schedule=schedule)
+        per_round_seconds=per_round, schedule=schedule,
+        device_dispatches=dispatches)
 
 
 def path_mpsi(id_sets: Sequence[np.ndarray], *, protocol: str = "rsa",
               bandwidth: float = DEFAULT_BANDWIDTH,
               latency: float = DEFAULT_LATENCY,
-              use_he: bool = True) -> MPSIStats:
-    """Path topology: client i TPSIs with client i+1 — O(m) sequential rounds."""
+              use_he: bool = True, backend: str = "host",
+              engine_impl: str = "pallas") -> MPSIStats:
+    """Path topology: client i TPSIs with client i+1 — O(m) sequential
+    rounds (data-dependent, so the device backend runs one batch-of-one
+    dispatch per hop)."""
     m = len(id_sets)
-    cur = np.asarray(id_sets[0])
+    cur = canonical_ids(id_sets[0])
     total_bytes = total_msgs = 0
     compute = 0.0
     per_round: List[float] = []
     schedule: List[List[Tuple[int, int]]] = []
     for i in range(1, m):
-        res = run_tpsi(protocol, cur, np.asarray(id_sets[i]))
+        res = run_tpsi(protocol, cur, np.asarray(id_sets[i]),
+                       backend=backend, engine_impl=engine_impl)
         cur = res.intersection
         total_bytes += res.total_bytes
         total_msgs += res.messages
@@ -185,13 +278,15 @@ def path_mpsi(id_sets: Sequence[np.ndarray], *, protocol: str = "rsa",
         intersection=cur, rounds=m - 1, total_bytes=total_bytes,
         total_messages=total_msgs, simulated_seconds=sum(per_round),
         compute_seconds=compute, per_round_seconds=per_round,
-        schedule=schedule)
+        schedule=schedule,
+        device_dispatches=(m - 1) if backend == "device" else 0)
 
 
 def star_mpsi(id_sets: Sequence[np.ndarray], *, protocol: str = "rsa",
               center: int = 0, bandwidth: float = DEFAULT_BANDWIDTH,
               latency: float = DEFAULT_LATENCY,
-              use_he: bool = True) -> MPSIStats:
+              use_he: bool = True, backend: str = "host",
+              engine_impl: str = "pallas") -> MPSIStats:
     """Star topology: the center TPSIs with every other client.
 
     O(1) logical rounds, but the central server engages the spokes one at a
@@ -202,7 +297,7 @@ def star_mpsi(id_sets: Sequence[np.ndarray], *, protocol: str = "rsa",
     center's NIC.
     """
     m = len(id_sets)
-    cur = np.asarray(id_sets[center])
+    cur = canonical_ids(id_sets[center])
     total_bytes = total_msgs = 0
     compute = 0.0
     center_busy = 0.0
@@ -211,7 +306,8 @@ def star_mpsi(id_sets: Sequence[np.ndarray], *, protocol: str = "rsa",
         if i == center:
             continue
         # center acts as receiver (it accumulates the running intersection)
-        res = run_tpsi(protocol, np.asarray(id_sets[i]), cur)
+        res = run_tpsi(protocol, np.asarray(id_sets[i]), cur,
+                       backend=backend, engine_impl=engine_impl)
         cur = res.intersection
         total_bytes += res.total_bytes
         total_msgs += res.messages
@@ -228,7 +324,8 @@ def star_mpsi(id_sets: Sequence[np.ndarray], *, protocol: str = "rsa",
         intersection=cur, rounds=1, total_bytes=total_bytes,
         total_messages=total_msgs, simulated_seconds=center_busy + b_secs,
         compute_seconds=compute, per_round_seconds=[center_busy, b_secs],
-        schedule=schedule)
+        schedule=schedule,
+        device_dispatches=(m - 1) if backend == "device" else 0)
 
 
 MPSI = {"tree": tree_mpsi, "path": path_mpsi, "star": star_mpsi}

@@ -1,8 +1,9 @@
 """Two-party PSI (TPSI) primitives — RSA blind signature and OPRF/OT flavors.
 
-Both protocols are implemented end-to-end on host (crypto is integer work,
-not MXU work — see DESIGN.md §3) with *byte-level communication accounting*
-so the MPSI schedulers above them can reproduce the paper's cost model:
+Both protocols keep their *sequential* crypto on host (RSA bigint
+signing is integer work, not MXU work — see DESIGN.md §3) with
+*byte-level communication accounting* so the MPSI schedulers above them
+can reproduce the paper's cost model:
 
   RSA flavor: receiver blinds + unblinds (transmits twice: the blinded set
   up, and implicitly holds the result), sender signs once and ships its own
@@ -13,6 +14,17 @@ so the MPSI schedulers above them can reproduce the paper's cost model:
   it — O(|send|) dominates. → LARGER party should be receiver (sender =
   smaller side ships less).
 
+Backends (DESIGN.md §6): every protocol takes ``backend="host"|"device"``.
+``host`` runs the per-element hashlib/dict path end-to-end.  ``device``
+routes the data-parallel tail — OPRF tag evaluation and the tag-matching
+/ intersection step — through ``repro.psi.engine`` (Pallas PRF +
+sorted-intersect kernels); RSA bigint signing stays host either way.
+Both backends consume the same *canonical* id sets (sorted, deduplicated
+— PSI is set intersection; duplicate receiver ids previously leaked
+double entries into the RSA intersection and were silently dropped by
+the OPRF tag dict) and share the accounting helpers below, so modeled
+bytes/messages are identical across backends by construction.
+
 Returned ``TPSIResult`` carries the intersection, per-direction byte counts,
 message counts, and measured compute seconds for the schedulers' makespan
 simulation.
@@ -22,6 +34,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import math
+import random
 import secrets
 import time
 from typing import Dict, List, Sequence, Set, Tuple
@@ -33,22 +46,58 @@ from repro.core import he
 # --------------------------------------------------------------- accounting
 
 ID_BYTES = 8            # an id on the wire (u64)
-HASH_BYTES = 32         # sha-256 digest
+HASH_BYTES = 32         # sha-256 digest / PRF tag on the wire
+OT_BYTES = 32           # per-receiver-element OT-extension traffic
+CUCKOO_HASHES = 3       # sender PRF evaluations per element (KKRT)
 
 
 @dataclasses.dataclass
 class TPSIResult:
-    intersection: np.ndarray          # sorted ids
+    intersection: np.ndarray          # sorted unique ids
     bytes_to_sender: int              # receiver -> sender traffic
     bytes_to_receiver: int            # sender -> receiver traffic
     messages: int
-    compute_seconds: float            # measured host crypto time
+    compute_seconds: float            # measured crypto/device time
     sender_compute_seconds: float
     receiver_compute_seconds: float
 
     @property
     def total_bytes(self) -> int:
         return self.bytes_to_sender + self.bytes_to_receiver
+
+
+def canonical_ids(ids: Sequence[int]) -> np.ndarray:
+    """PSI operates on *sets*: sorted unique non-negative int64 ids.
+
+    Dedup at protocol entry is what makes duplicate inputs well-defined
+    (and identical) in both flavors and both backends."""
+    arr = np.unique(np.asarray(ids, np.int64).reshape(-1))
+    if arr.size and arr[0] < 0:
+        raise ValueError("ids must be non-negative (u63 id space)")
+    return arr
+
+
+def rsa_accounting(n_send: int, n_recv: int, key: "RSAKey"
+                   ) -> Tuple[int, int, int]:
+    """(bytes_to_sender, bytes_to_receiver, messages) of one RSA TPSI.
+
+    Counted wire protocol:
+      1. sender -> receiver : public key (negligible)
+      2. receiver -> sender : |R| blinded hashes          (|R| · modbytes)
+      3. sender -> receiver : |R| blind signatures        (|R| · modbytes)
+                              + |S| hashed own signatures (|S| · HASH_BYTES)
+      => receiver-side traffic 2·|R|·modbytes dominates when |R| large —
+         hence "smaller party should receive".
+    """
+    mb = key.modulus_bytes()
+    return n_recv * mb, n_recv * mb + n_send * HASH_BYTES, 3
+
+
+def oprf_accounting(n_send: int, n_recv: int) -> Tuple[int, int, int]:
+    """(bytes_to_sender, bytes_to_receiver, messages) of one OPRF TPSI:
+    |R| OT-extension up-traffic, h·|S| PRF tags down."""
+    return (n_recv * OT_BYTES,
+            n_recv * OT_BYTES + n_send * CUCKOO_HASHES * HASH_BYTES, 3)
 
 
 def _h_to_group(x: int, n: int) -> int:
@@ -92,11 +141,7 @@ _RSA_E = 65537
 
 
 def rsa_keygen(bits: int = 512, *, seed: int | None = None) -> RSAKey:
-    if seed is not None:
-        import random
-        rng = random.Random(seed)
-    else:
-        rng = secrets.SystemRandom()
+    rng = secrets.SystemRandom() if seed is None else random.Random(seed)
     while True:
         p = he._gen_prime(bits // 2, rng)
         q = he._gen_prime(bits // 2, rng)
@@ -111,57 +156,94 @@ def rsa_keygen(bits: int = 512, *, seed: int | None = None) -> RSAKey:
                           qinv=pow(q, -1, p))
 
 
-def tpsi_rsa(sender_ids: Sequence[int], receiver_ids: Sequence[int], *,
-             key: RSAKey | None = None) -> TPSIResult:
-    """RSA-blind-signature PSI. The RECEIVER learns the intersection.
+def rsa_sign_stage(key: RSAKey, sender_ids: np.ndarray,
+                   receiver_ids: np.ndarray
+                   ) -> Tuple[List[int], List[int], float, float]:
+    """Host bigint half of RSA TPSI: blind → sign → unblind.
 
-    Wire protocol (counted):
-      1. sender -> receiver : public key (negligible)
-      2. receiver -> sender : |R| blinded hashes          (|R| · modbytes)
-      3. sender -> receiver : |R| blind signatures        (|R| · modbytes)
-                              + |S| hashed own signatures (|S| · HASH_BYTES)
-      => receiver-side traffic 2·|R|·modbytes dominates when |R| large —
-         hence "smaller party should receive".
+    Returns (receiver_sigs aligned with receiver_ids, sender_sigs,
+    sender_seconds, receiver_seconds).  Backend-independent: the device
+    path only replaces the tag *matching* that follows.
     """
-    key = key or default_rsa_key()
-    n, e, d = key.n, key.e, key.d
-    mb = key.modulus_bytes()
+    n, e = key.n, key.e
 
     t0 = time.perf_counter()
-    # receiver blinds
     blinds: List[int] = []
     rs: List[int] = []
     for y in receiver_ids:
         r = secrets.randbelow(n - 2) + 2
         rs.append(r)
         blinds.append(_h_to_group(y, n) * pow(r, e, n) % n)
-    t_recv_blind = time.perf_counter() - t0
+    t_blind = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    # sender signs receiver's blinds and its own hashes
     signed_blinds = [key.sign(b) for b in blinds]
-    sender_tags: Set[bytes] = {_h2(key.sign(_h_to_group(x, n)))
-                               for x in sender_ids}
-    t_send = time.perf_counter() - t0
+    sender_sigs = [key.sign(_h_to_group(x, n)) for x in sender_ids]
+    t_sign = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    # receiver unblinds and intersects
-    inter = []
-    for y, sb, r in zip(receiver_ids, signed_blinds, rs):
-        sig = sb * pow(r, -1, n) % n
-        if _h2(sig) in sender_tags:
-            inter.append(int(y))
-    t_recv_un = time.perf_counter() - t0
+    receiver_sigs = [sb * pow(r, -1, n) % n
+                     for sb, r in zip(signed_blinds, rs)]
+    t_unblind = time.perf_counter() - t0
 
-    nr, ns = len(receiver_ids), len(sender_ids)
+    return receiver_sigs, sender_sigs, t_sign, t_blind + t_unblind
+
+
+def rsa_match_inputs(receiver_ids: np.ndarray, receiver_sigs: List[int],
+                     sender_sigs: List[int]
+                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Project host signatures into the device engine's 63-bit tag space
+    (truncation stands in for the 32-byte hash-compare of the host path;
+    the modeled wire tags remain HASH_BYTES wide in the accounting)."""
+    from repro.psi.engine import tag_words
+    r_tags = np.fromiter((tag_words(s) for s in receiver_sigs),
+                         np.int64, count=len(receiver_sigs))
+    s_tags = np.fromiter((tag_words(s) for s in sender_sigs),
+                         np.int64, count=len(sender_sigs))
+    return r_tags, np.asarray(receiver_ids, np.int64), s_tags
+
+
+def tpsi_rsa(sender_ids: Sequence[int], receiver_ids: Sequence[int], *,
+             key: RSAKey | None = None, backend: str = "host",
+             engine_impl: str = "pallas") -> TPSIResult:
+    """RSA-blind-signature PSI. The RECEIVER learns the intersection.
+
+    Wire protocol/bytes: see ``rsa_accounting``.  backend="device" keeps
+    the bigint blind/sign/unblind on host and routes the signature-tag
+    matching through the batched sorted-intersect engine.
+    """
+    key = key or default_rsa_key()
+    s_ids = canonical_ids(sender_ids)
+    r_ids = canonical_ids(receiver_ids)
+
+    receiver_sigs, sender_sigs, t_sign, t_recv_crypto = rsa_sign_stage(
+        key, s_ids, r_ids)
+
+    if backend == "device":
+        from repro.psi import engine as psi_engine
+        r_tags, r_vals, s_tags = rsa_match_inputs(r_ids, receiver_sigs,
+                                                  sender_sigs)
+        rnd = psi_engine.match_round([r_tags], [r_vals], [s_tags],
+                                     impl=engine_impl)
+        inter = rnd.intersections[0]
+        t_match = rnd.device_seconds
+    else:
+        t0 = time.perf_counter()
+        sender_tags: Set[bytes] = {_h2(s) for s in sender_sigs}
+        inter = np.asarray([int(y) for y, sig in zip(r_ids, receiver_sigs)
+                            if _h2(sig) in sender_tags], np.int64)
+        t_match = time.perf_counter() - t0
+
+    to_sender, to_receiver, messages = rsa_accounting(
+        len(s_ids), len(r_ids), key)
     return TPSIResult(
-        intersection=np.sort(np.asarray(sorted(inter), np.int64)),
-        bytes_to_sender=nr * mb,
-        bytes_to_receiver=nr * mb + ns * HASH_BYTES,
-        messages=3,
-        compute_seconds=t_recv_blind + t_send + t_recv_un,
-        sender_compute_seconds=t_send,
-        receiver_compute_seconds=t_recv_blind + t_recv_un,
+        intersection=inter,
+        bytes_to_sender=to_sender,
+        bytes_to_receiver=to_receiver,
+        messages=messages,
+        compute_seconds=t_sign + t_recv_crypto + t_match,
+        sender_compute_seconds=t_sign,
+        receiver_compute_seconds=t_recv_crypto + t_match,
     )
 
 
@@ -171,8 +253,21 @@ def _oprf(seed_bytes: bytes, x: int) -> bytes:
     return hashlib.sha256(seed_bytes + int(x).to_bytes(8, "little")).digest()
 
 
+def oprf_session_rng(seed: int | None = None):
+    """Session randomness: system entropy by default, reproducible with
+    an explicit seed (no more inline ``__import__`` hacks)."""
+    return secrets.SystemRandom() if seed is None else random.Random(seed)
+
+
+def oprf_seed_words(rng) -> Tuple[int, int]:
+    """Two u32 session-key words for the device PRF (the OT-extension
+    seed agreement itself is only cost-modeled, as on the host path)."""
+    return rng.getrandbits(32), rng.getrandbits(32)
+
+
 def tpsi_oprf(sender_ids: Sequence[int], receiver_ids: Sequence[int], *,
-              seed: int | None = None) -> TPSIResult:
+              seed: int | None = None, backend: str = "host",
+              engine_impl: str = "pallas") -> TPSIResult:
     """OPRF(OT-extension)-style PSI (KKRT pattern). The RECEIVER learns the
     intersection.
 
@@ -181,40 +276,55 @@ def tpsi_oprf(sender_ids: Sequence[int], receiver_ids: Sequence[int], *,
     evaluations PER ELEMENT (one per hash function) — the O(h·|send|) term
     that motivates the paper's "larger party should be the receiver" rule:
     the sender's transmission dominates, so the smaller party should send.
+
+    backend="device" evaluates the PRF with the Pallas psi_prf kernel and
+    intersects with the sorted-merge kernel in one dispatch; the wire/cost
+    model (OT traffic, h tags per sender element) is unchanged.
     """
-    OT_BYTES = 32            # per-receiver-element OT-extension traffic
-    CUCKOO_HASHES = 3        # sender PRF evaluations per element
-    rng = secrets.SystemRandom() if seed is None else __import__("random").Random(seed)
-    seed_bytes = rng.getrandbits(256).to_bytes(32, "little")
+    s_ids = canonical_ids(sender_ids)
+    r_ids = canonical_ids(receiver_ids)
+    rng = oprf_session_rng(seed)
 
-    t0 = time.perf_counter()
-    recv_tags: Dict[bytes, int] = {_oprf(seed_bytes, y): int(y)
-                                   for y in receiver_ids}
-    t_recv = time.perf_counter() - t0
+    if backend == "device":
+        from repro.psi import engine as psi_engine
+        rnd = psi_engine.oprf_round([s_ids], [r_ids],
+                                    [oprf_seed_words(rng)],
+                                    impl=engine_impl)
+        inter = rnd.intersections[0]
+        # one joint dispatch evaluates both parties' tags: split evenly
+        t_send = t_recv = rnd.device_seconds / 2.0
+    else:
+        seed_bytes = rng.getrandbits(256).to_bytes(32, "little")
 
-    t0 = time.perf_counter()
-    # sender evaluates the PRF under each cuckoo hash position; with a
-    # shared seed the matching tag is the position-0 one, the rest are
-    # decoys the receiver discards (cost-faithful, result-identical)
-    sender_tags = [_oprf(seed_bytes, x) for x in sender_ids]
-    _decoys = [_oprf(seed_bytes + bytes([h]), x)
-               for h in range(1, CUCKOO_HASHES) for x in sender_ids]
-    t_send = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        recv_tags: Dict[bytes, int] = {_oprf(seed_bytes, y): int(y)
+                                       for y in r_ids}
+        t_recv = time.perf_counter() - t0
 
-    t0 = time.perf_counter()
-    inter = sorted(recv_tags[t] for t in sender_tags if t in recv_tags)
-    t_match = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        # sender evaluates the PRF under each cuckoo hash position; with a
+        # shared seed the matching tag is the position-0 one, the rest are
+        # decoys the receiver discards (cost-faithful, result-identical)
+        sender_tags = [_oprf(seed_bytes, x) for x in s_ids]
+        _decoys = [_oprf(seed_bytes + bytes([h]), x)
+                   for h in range(1, CUCKOO_HASHES) for x in s_ids]
+        t_send = time.perf_counter() - t0
 
-    nr, ns = len(receiver_ids), len(sender_ids)
+        t0 = time.perf_counter()
+        inter = np.asarray(sorted(recv_tags[t] for t in sender_tags
+                                  if t in recv_tags), np.int64)
+        t_recv += time.perf_counter() - t0
+
+    to_sender, to_receiver, messages = oprf_accounting(len(s_ids),
+                                                       len(r_ids))
     return TPSIResult(
-        intersection=np.asarray(inter, np.int64),
-        bytes_to_sender=nr * OT_BYTES,                       # OT up-traffic
-        bytes_to_receiver=(nr * OT_BYTES
-                           + ns * CUCKOO_HASHES * HASH_BYTES),
-        messages=3,
-        compute_seconds=t_recv + t_send + t_match,
+        intersection=inter,
+        bytes_to_sender=to_sender,
+        bytes_to_receiver=to_receiver,
+        messages=messages,
+        compute_seconds=t_recv + t_send,
         sender_compute_seconds=t_send,
-        receiver_compute_seconds=t_recv + t_match,
+        receiver_compute_seconds=t_recv,
     )
 
 

@@ -4,6 +4,10 @@
   kmeans_update   — fused Lloyd update: distance+argmin+per-cluster
                     sum/count accumulation in one pass, the point tile
                     resident in VMEM (Cluster-Coreset hot loop)
+  psi_prf         — PSI tag PRF: Feistel multiply–xorshift rounds over
+                    u64 id lanes as 2×u32 (OPRF tag evaluation)
+  sorted_intersect— bitonic sort-merge intersection of two padded
+                    sorted tag arrays (TPSI matching, DESIGN.md §6)
   flash_attention — online-softmax GQA attention (SplitNN LLM train/serve)
   ssd_scan        — Mamba2 SSD chunked scan with VMEM-carried state
 

@@ -1,0 +1,51 @@
+"""Pallas TPU kernel: vectorized PSI tag PRF over u64 id lanes.
+
+Elementwise VPU work: each grid step loads a (BN,) tile of the hi/lo
+u32 id lanes into VMEM and runs the 5-round Feistel / multiply–xorshift
+network entirely in VREGs — one HBM read and one write per lane for the
+whole tag evaluation, where the host OPRF path paid a Python + sha256
+round trip per element.
+
+The round network IS the jnp ref — ``ref.prf_tags`` is pure value math
+on u32 lanes (its constants are numpy scalars, which fold into the
+kernel as literals; jnp scalars would be captured tracers, which
+pallas_call rejects), so the kernel body invokes it on the VMEM tile
+and the two implementations cannot drift.  What the pallas_call adds is
+the tiled VMEM residency that Mosaic compiles on real TPU
+(parity-tested under INTERPRET).
+
+Padding contract (enforced by ops.py): N % block_n == 0.  Padded lanes
+produce garbage tags that the wrapper slices off — the PRF has no
+cross-lane data flow, so padding cannot perturb real lanes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.psi_prf import ref
+
+
+def _prf_kernel(hi_ref, lo_ref, tag_hi_ref, tag_lo_ref):
+    tag_hi_ref[...], tag_lo_ref[...] = ref.prf_tags(hi_ref[...],
+                                                    lo_ref[...])
+
+
+def prf_tags_pallas(hi: jnp.ndarray, lo: jnp.ndarray, *, block_n: int,
+                    interpret: bool = True):
+    """hi/lo (N,) u32 (seed-whitened, padded) -> (tag_hi, tag_lo) (N,) u32.
+
+    N % block_n == 0.  Caller slices off padding.
+    """
+    n = hi.shape[0]
+    assert n % block_n == 0, (n, block_n)
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _prf_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_n,), lambda i: (i,))] * 2,
+        out_specs=[pl.BlockSpec((block_n,), lambda i: (i,))] * 2,
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.uint32)] * 2,
+        interpret=interpret,
+    )(hi, lo)

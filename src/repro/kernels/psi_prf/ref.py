@@ -1,0 +1,50 @@
+"""Pure-jnp oracle for the PSI tag PRF.
+
+A 5-round Feistel network over a 64-bit id held as two u32 lanes
+(hi, lo), with a murmur3-fmix32 round function and fixed odd round
+constants.  Each round is multiply–xorshift mixing on one lane followed
+by a cross-lane xor — the "multiply–xorshift rounds over u64 id lanes"
+that replace the per-element host ``hashlib.sha256`` OPRF evaluation
+(DESIGN.md §6).
+
+Keying: the caller xors the session seed into (hi, lo) BEFORE calling
+(see ops.py), so the network itself is constant and nothing but array
+operands reaches the Pallas kernel.  Because a Feistel network is a
+bijection on its 64-bit input regardless of the round function, two
+distinct (seeded) ids can only collide through the final 2-bit mask —
+tags live in [0, 2^62) so that (tag << 1) | origin_bit, the
+sorted-intersect key, stays below the padding sentinels (top bit set;
+see kernels/sorted_intersect/ref.py).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+_u32 = np.uint32
+
+# distinct odd constants (golden-ratio / sqrt-prime words, as in TEA/SHA)
+ROUND_KEYS = tuple(_u32(k) for k in (
+    0x9E3779B9, 0xBB67AE85, 0x3C6EF372, 0xA54FF53A, 0x510E527F))
+
+TAG_HI_MASK = 0x3FFFFFFF          # 62-bit tags: room for the origin bit
+
+
+def _fmix32(x: jnp.ndarray) -> jnp.ndarray:
+    """murmur3 finalizer: bijective multiply–xorshift mixer on u32."""
+    x = x ^ (x >> 16)
+    x = x * _u32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * _u32(0xC2B2AE35)
+    return x ^ (x >> 16)
+
+
+def prf_tags(hi: jnp.ndarray, lo: jnp.ndarray
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(hi, lo) (N,) u32 seed-whitened id lanes -> (tag_hi, tag_lo),
+    with tag_hi < 2^30 (62-bit tag space)."""
+    for k in ROUND_KEYS:
+        hi, lo = lo, hi ^ _fmix32(lo + k)
+    return hi & _u32(TAG_HI_MASK), lo

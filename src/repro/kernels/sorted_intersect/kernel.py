@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: sort-merge intersection of two padded sorted
+63-bit key arrays (bitonic merge network).
+
+One grid step holds the two u32 key lanes of both sides resident in
+VMEM and runs the log2(2P) compare-exchange stages of a bitonic MERGE
+(the inputs are already sorted, so the full O(log² n) bitonic sort is
+unnecessary) without touching HBM between stages.  Each stage is a
+reshape + lexicographic min/max over the (kh, kl) lane pair; origin and
+receiver-rank recovery ride on the key's bit 0 and a final cumsum.  The
+merge network IS the jnp ref — ``ref.sorted_intersect`` is pure value
+math, so the kernel body invokes it on the VMEM-resident lanes and the
+two implementations cannot drift; what the pallas_call adds is the
+VMEM residency/layout contract that Mosaic compiles on real TPU
+(parity-tested under INTERPRET).
+
+VMEM bound: 2 key lanes × 2P × 4B resident (plus the rank cumsum), so a
+single block handles P up to PALLAS_MAX_P = 2^19 per core on a
+16 MB-VMEM TPU; past that bound ops.py falls back to the jnp ref path
+(a tiled multi-pass merge is a ROADMAP follow-on).
+
+Padding contract (ops.py): P is a power of two; A pads with PAD_A,
+B with PAD_B — distinct sentinels with the top bit set, so pads sort
+last and can never count as matches (real keys are 63-bit).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.sorted_intersect import ref
+
+PALLAS_MAX_P = 1 << 19    # single-block VMEM bound (per-side length)
+
+
+def _merge_kernel(a_kh_ref, a_kl_ref, b_kh_ref, b_kl_ref,
+                  sel_ref, rank_ref, mkh_ref, mkl_ref):
+    sel, rank, mkh, mkl = ref.sorted_intersect(
+        a_kh_ref[...], a_kl_ref[...], b_kh_ref[...], b_kl_ref[...])
+    sel_ref[...] = sel
+    rank_ref[...] = rank
+    mkh_ref[...] = mkh
+    mkl_ref[...] = mkl
+
+
+def sorted_intersect_pallas(a_kh, a_kl, b_kh, b_kl, *,
+                            interpret: bool = True):
+    """All inputs (P,) u32, P a power of two, per-side sorted+padded.
+    Returns (sel (2P,) i32, rank (2P,) i32, merged_kh, merged_kl)."""
+    p = a_kh.shape[0]
+    assert p & (p - 1) == 0, p
+    two_p = 2 * p
+    return pl.pallas_call(
+        _merge_kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((p,), lambda i: (0,))] * 4,
+        out_specs=[pl.BlockSpec((two_p,), lambda i: (0,))] * 4,
+        out_shape=[jax.ShapeDtypeStruct((two_p,), jnp.int32)] * 2 +
+                  [jax.ShapeDtypeStruct((two_p,), jnp.uint32)] * 2,
+        interpret=interpret,
+    )(a_kh, a_kl, b_kh, b_kl)

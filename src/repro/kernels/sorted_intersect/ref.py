@@ -1,0 +1,92 @@
+"""Pure-jnp oracle for the sorted-intersect (bitonic sort-merge) step.
+
+Key layout — one 63-bit integer per element, split into u32 lanes:
+
+    key = (tag << 1) | origin        tag < 2^62,  origin: 0=sender 1=receiver
+    kh  = key >> 32   (< 2^31 for real elements)
+    kl  = key & 0xFFFFFFFF
+
+Packing the origin into bit 0 keeps the merge TWO lanes wide (the u32
+pair) instead of dragging payload/origin lanes through every
+compare-exchange stage: equal tags sort sender-immediately-before-
+receiver, so a receiver element is matched iff its predecessor is the
+same tag with origin 0 — i.e. ``key[i] == key[i-1] + 1`` with bit 0
+set.  The receiver's plaintext id is NOT carried through the merge;
+instead ``rank[i] = cumsum(origin)`` counts receiver elements in merged
+order, which (receiver pads sort last) indexes the receiver's
+tag-sorted id array directly: id of a selected slot = r_ids_by_tag[
+rank-1].  The engine does that gather outside the kernel.
+
+Inputs are two PADDED SORTED key arrays of equal power-of-two length P,
+ascending; each side pads its tail with its own sentinel (top bit set,
+so pads sort last, never satisfy the validity check, and — the
+sentinels differing — never form a cross-side match).
+
+Precondition: tags are UNIQUE within each side (the engine dedups ids
+before tagging; the PRF is a bijection pre-mask).  Then every equal-tag
+run is one sender followed by one receiver, and predecessor-equality is
+exactly set intersection.
+
+Algorithm: C = [A, reverse(B)] is a bitonic sequence of length 2P, so
+one bitonic MERGE network (log2(2P) vectorized compare-exchange stages,
+each a reshape + lexicographic min/max on the u32 lane pair) sorts it.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+_u32 = np.uint32
+
+# per-side padding sentinels: top bit set → after all real (63-bit) keys
+PAD_A = (0xFFFFFFFF, 0xFFFFFFFF)      # receiver-side pad key (kh, kl)
+PAD_B = (0xFFFFFFFF, 0xFFFFFFFE)      # sender-side pad key
+VALID_LIMIT = 0x80000000              # real keys have kh < 2^31
+
+
+def _compare_exchange(lanes: List[jnp.ndarray], s: int) -> List[jnp.ndarray]:
+    """One bitonic stage: compare-exchange c[i] with c[i+s] inside every
+    2s block, keyed lexicographically on the (kh, kl) lane pair."""
+    length = lanes[0].shape[0]
+    pair = lambda x: x.reshape(-1, 2, s)
+    kh, kl = pair(lanes[0]), pair(lanes[1])
+    swap = ((kh[:, 0, :] > kh[:, 1, :]) |
+            ((kh[:, 0, :] == kh[:, 1, :]) & (kl[:, 0, :] > kl[:, 1, :])))
+    out = []
+    for lane in lanes:
+        r = pair(lane)
+        x, y = r[:, 0, :], r[:, 1, :]
+        small = jnp.where(swap, y, x)
+        large = jnp.where(swap, x, y)
+        out.append(jnp.stack([small, large], axis=1).reshape(length))
+    return out
+
+
+def sorted_intersect(a_kh: jnp.ndarray, a_kl: jnp.ndarray,
+                     b_kh: jnp.ndarray, b_kl: jnp.ndarray
+                     ) -> Tuple[jnp.ndarray, ...]:
+    """Receiver keys A / sender keys B, each (P,) u32 lane pairs with P a
+    power of two, ascending -> (sel (2P,) i32, rank (2P,) i32,
+    merged_kh, merged_kl).
+
+    ``sel`` marks merged slots holding a matched RECEIVER element;
+    ``rank`` is the 1-based count of receiver-origin slots up to and
+    including each position (valid wherever sel is set)."""
+    p = a_kh.shape[0]
+    lanes = [jnp.concatenate([a, jnp.flip(b)]) for a, b in
+             [(a_kh, b_kh), (a_kl, b_kl)]]
+    s = p
+    while s >= 1:
+        lanes = _compare_exchange(lanes, s)
+        s //= 2
+    kh, kl = lanes
+    origin = (kl & _u32(1)).astype(jnp.int32)
+    rank = jnp.cumsum(origin)
+    # receiver slot matched ⇔ predecessor is the same tag from the sender
+    # side: key equality up to the origin bit, with sender (even) first
+    prev_match = (kh[1:] == kh[:-1]) & (kl[1:] == kl[:-1] + _u32(1))
+    sel = (jnp.concatenate([jnp.zeros((1,), bool), prev_match])
+           & (origin == 1) & (kh < _u32(VALID_LIMIT)))
+    return sel.astype(jnp.int32), rank, kh, kl

@@ -1,0 +1,11 @@
+"""Device-accelerated PSI engine (DESIGN.md §6).
+
+  engine — batched round executor: pads every TPSI pair of an MPSI
+           round to one (pairs, P) batch and runs PRF tag evaluation +
+           sorted-merge intersection in a single vmapped device
+           dispatch per round.
+"""
+from repro.psi.engine import (EngineRound, match_round, oprf_round,
+                              tag_words)
+
+__all__ = ["EngineRound", "match_round", "oprf_round", "tag_words"]

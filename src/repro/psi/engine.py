@@ -1,0 +1,287 @@
+"""Batched PSI round executor — the device half of TPSI (DESIGN.md §6).
+
+The host protocol layer (repro.core.tpsi / mpsi) keeps everything that
+is inherently sequential bigint work (RSA blind/sign/unblind) or wire
+accounting; this engine takes the data-parallel remainder of every
+concurrent pair of an MPSI round — OPRF tag evaluation and sorted-merge
+intersection — pads all pairs to one (pairs, P) batch, and runs them as
+vmapped device dispatches:
+
+  oprf_round  : ids --psi_prf kernel--> 62-bit tags --sort-->
+                --sorted_intersect kernel--> matched receiver ids
+  match_round : host-computed tags (e.g. truncated RSA signatures)
+                --sort--> --sorted_intersect kernel--> matched ids
+
+so a 10-client Tree-MPSI costs O(log m) dispatches instead of ~45
+per-element Python sessions.  Byte/message accounting is NOT done here —
+both backends share the cost model in repro.core.tpsi, which keeps the
+modeled wire costs byte-identical across backends.
+
+Sorting between tag-eval and merge is mode-switched (``sort=``):
+
+  "device"  one dispatch per round; tags are sorted in-graph with
+            ``lax.sort`` — the TPU-true path (device sort is cheap on
+            real hardware and ids never leave the accelerator).
+  "host"    two dispatches (tag-eval, then merge) with numpy's radix-
+            class u64 sort between them — the fast path on CPU, where
+            XLA's multi-operand comparator sort is ~30× slower than
+            numpy.  Default follows REPRO_PALLAS_INTERPRET.
+
+Id recovery uses the merge kernel's (sel, rank) outputs: ``rank`` is
+the receiver-element count in merged order, so a selected slot's id is
+``receiver_ids_by_tag[rank - 1]`` — no payload lanes ride the merge and
+no compaction sort is needed (see kernels/sorted_intersect/ref.py).
+
+Preconditions: ids are unique per set (tpsi dedups at protocol entry)
+and non-negative int64.  Tags live in [0, 2^62): the PRF masks its top
+two bits, ``tag_words`` masks host-derived tags, and the packed sort
+key (tag << 1) | origin therefore stays below the padding sentinels.
+
+Shapes are static per (pairs, P = next_pow2(max set size)) — jit caches
+one executable per bucket.  First use of a bucket compiles OUTSIDE the
+timed region (an untimed zeros-input warm-up), so ``EngineRound``
+seconds measure protocol execution, not XLA trace/compile; later rounds
+and runs that hit the same bucket reuse the cached executable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.kernels.padding import INTERPRET
+from repro.kernels.psi_prf.ops import prf_tags
+from repro.kernels.sorted_intersect.ops import (next_pow2, pack_keys,
+                                                sorted_intersect)
+from repro.kernels.sorted_intersect.ref import PAD_A, PAD_B
+
+TAG_MASK = (1 << 62) - 1     # engine tag space: 62-bit
+
+
+def tag_words(x: int) -> int:
+    """Map an arbitrary host integer (e.g. an RSA signature) into the
+    engine's 62-bit tag space."""
+    return x & TAG_MASK
+
+
+@dataclasses.dataclass
+class EngineRound:
+    intersections: List[np.ndarray]   # per pair: sorted unique int64 ids
+    device_seconds: float             # dispatches + in-between host sort
+    dispatches: int = 1
+
+
+def _default_sort(sort: Optional[str]) -> str:
+    return sort or ("host" if INTERPRET else "device")
+
+
+# ----------------------------------------------------------- lane packing
+
+def _split64(ids: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    a = np.asarray(ids, np.int64).astype(np.uint64)
+    return ((a >> np.uint64(32)).astype(np.uint32),
+            (a & np.uint64(0xFFFFFFFF)).astype(np.uint32))
+
+
+def _pack(sets: Sequence[np.ndarray], p: int
+          ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """List of (n_i,) int64 -> ((B,P) u32 hi, (B,P) u32 lo, (B,) i32 n)."""
+    b = len(sets)
+    hi = np.zeros((b, p), np.uint32)
+    lo = np.zeros((b, p), np.uint32)
+    n = np.zeros((b,), np.int32)
+    for i, s in enumerate(sets):
+        h, l = _split64(s)
+        hi[i, :len(s)] = h
+        lo[i, :len(s)] = l
+        n[i] = len(s)
+    return hi, lo, n
+
+
+def _host_key_rows(tag64_sorted: np.ndarray, origin: int,
+                   pad: Tuple[int, int], p: int
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+    """Sorted u64 tags -> one padded (P,) u32 key-lane row pair."""
+    key = (tag64_sorted.astype(np.uint64) << np.uint64(1)) | np.uint64(origin)
+    kh = np.full((p,), pad[0], np.uint32)
+    kl = np.full((p,), pad[1], np.uint32)
+    kh[:len(key)] = (key >> np.uint64(32)).astype(np.uint32)
+    kl[:len(key)] = (key & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    return kh, kl
+
+
+def _mask_pad(kh, kl, n, pad):
+    pos = jnp.arange(kh.shape[0], dtype=jnp.int32)
+    return (jnp.where(pos < n, kh, np.uint32(pad[0])),
+            jnp.where(pos < n, kl, np.uint32(pad[1])))
+
+
+# ------------------------------------------------------- jitted dispatches
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def _prf_batch(r_hi, r_lo, s_hi, s_lo, seeds, *, impl):
+    """Tag both sides of every pair: (B,P) id lanes -> (B,P) tag lanes."""
+    def one(rh, rl, sh, sl, sd):
+        return prf_tags(rh, rl, sd, impl=impl) + prf_tags(sh, sl, sd,
+                                                          impl=impl)
+    return jax.vmap(one)(r_hi, r_lo, s_hi, s_lo, seeds)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def _merge_batch(a_kh, a_kl, b_kh, b_kl, *, impl):
+    """(B,P) pre-sorted key lanes -> (B,2P) (sel, rank)."""
+    def one(akh, akl, bkh, bkl):
+        sel, rank, _, _ = sorted_intersect(akh, akl, bkh, bkl, impl=impl)
+        return sel, rank
+    return jax.vmap(one)(a_kh, a_kl, b_kh, b_kl)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def _oprf_single(r_hi, r_lo, r_n, s_hi, s_lo, s_n, seeds, *, impl):
+    """Single-dispatch (device-sort) path: PRF + lax.sort + merge +
+    in-graph id recovery.  Returns (B,2P) (sel, cand_hi, cand_lo)."""
+    def one(rh, rl, rn, sh, sl, sn, sd):
+        p = rh.shape[0]
+        r_kh, r_kl = pack_keys(*prf_tags(rh, rl, sd, impl=impl), 1)
+        s_kh, s_kl = pack_keys(*prf_tags(sh, sl, sd, impl=impl), 0)
+        r_kh, r_kl = _mask_pad(r_kh, r_kl, rn, PAD_A)
+        s_kh, s_kl = _mask_pad(s_kh, s_kl, sn, PAD_B)
+        perm = jnp.arange(p, dtype=jnp.int32)
+        r_kh, r_kl, perm = lax.sort((r_kh, r_kl, perm), num_keys=2)
+        s_kh, s_kl = lax.sort((s_kh, s_kl), num_keys=2)
+        sel, rank, _, _ = sorted_intersect(r_kh, r_kl, s_kh, s_kl,
+                                           impl=impl)
+        by_tag = jnp.clip(rank - 1, 0, p - 1)
+        src = jnp.take(perm, by_tag)          # merged slot -> receiver row
+        return sel, jnp.take(rh, src), jnp.take(rl, src)
+    return jax.vmap(one)(r_hi, r_lo, r_n, s_hi, s_lo, s_n, seeds)
+
+
+# ----------------------------------------------------- compile warm-up
+
+_warm_cache: set = set()
+
+
+def _warm(kind: str, b: int, p: int, impl: str) -> None:
+    """Compile a (dispatch, pairs, P, impl) bucket outside the timed
+    region: jit keys on shapes/dtypes only, so a zeros-input call
+    builds the executable the subsequent timed call reuses."""
+    key = (kind, b, p, impl)
+    if key in _warm_cache:
+        return
+    z = np.zeros((b, p), np.uint32)
+    n = np.zeros((b,), np.int32)
+    seeds = np.zeros((b, 2), np.uint32)
+    if kind == "prf":
+        out = _prf_batch(z, z, z, z, seeds, impl=impl)
+    elif kind == "merge":
+        out = _merge_batch(z, z, z, z, impl=impl)
+    else:
+        out = _oprf_single(z, z, n, z, z, n, seeds, impl=impl)
+    jax.block_until_ready(out)
+    _warm_cache.add(key)
+
+
+# --------------------------------------------------------- round executors
+
+def _host_sorted_merge(r_tags64: Sequence[np.ndarray],
+                       receiver_ids: Sequence[np.ndarray],
+                       s_tags64: Sequence[np.ndarray], p: int,
+                       impl: str) -> List[np.ndarray]:
+    """Host-sort path shared by oprf_round and match_round: numpy-sort
+    each pair's u64 tags, pack the padded key-lane batch, run the merge
+    dispatch, and recover ids from (sel, rank)."""
+    b = len(r_tags64)
+    a_kh = np.empty((b, p), np.uint32)
+    a_kl = np.empty((b, p), np.uint32)
+    b_kh = np.empty((b, p), np.uint32)
+    b_kl = np.empty((b, p), np.uint32)
+    ids_by_tag: List[np.ndarray] = []
+    for i in range(b):
+        order = np.argsort(r_tags64[i])
+        ids_by_tag.append(np.asarray(receiver_ids[i], np.int64)[order])
+        a_kh[i], a_kl[i] = _host_key_rows(r_tags64[i][order], 1, PAD_A, p)
+        b_kh[i], b_kl[i] = _host_key_rows(np.sort(s_tags64[i]), 0,
+                                          PAD_B, p)
+    sel_rank = jax.block_until_ready(_merge_batch(a_kh, a_kl, b_kh, b_kl,
+                                                  impl=impl))
+    sel = np.asarray(sel_rank[0]).astype(bool)
+    rank = np.asarray(sel_rank[1])
+    return [np.sort(ids_by_tag[i][rank[i][sel[i]] - 1])
+            for i in range(b)]
+
+
+def oprf_round(sender_sets: Sequence[np.ndarray],
+               receiver_sets: Sequence[np.ndarray],
+               seeds: Sequence[Tuple[int, int]], *,
+               impl: str = "pallas",
+               sort: Optional[str] = None) -> EngineRound:
+    """One MPSI round of OPRF-flavor pairs, batched.
+
+    ``seeds[i]`` is the pair's session key as two u32 words (the wire
+    protocol still models the OT-extension seed agreement; see tpsi).
+    Each receiver learns intersection(sender_sets[i], receiver_sets[i]).
+    """
+    b = len(sender_sets)
+    if b == 0:
+        return EngineRound([], 0.0, 0)
+    sort = _default_sort(sort)
+    p = next_pow2(max(max((len(s) for s in sender_sets), default=0),
+                      max((len(r) for r in receiver_sets), default=0), 1))
+    s_hi, s_lo, s_n = _pack(sender_sets, p)
+    r_hi, r_lo, r_n = _pack(receiver_sets, p)
+    seed_arr = np.asarray(seeds, np.uint32).reshape(b, 2)
+
+    if sort == "device":
+        _warm("single", b, p, impl)
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(_oprf_single(
+            r_hi, r_lo, r_n, s_hi, s_lo, s_n, seed_arr, impl=impl))
+        sel = np.asarray(out[0]).astype(bool)
+        ids = (np.asarray(out[1], np.uint64) << np.uint64(32)) \
+            | np.asarray(out[2], np.uint64)
+        inters = [np.sort(ids[i][sel[i]].astype(np.int64))
+                  for i in range(b)]
+        return EngineRound(inters, time.perf_counter() - t0, 1)
+
+    _warm("prf", b, p, impl)
+    _warm("merge", b, p, impl)
+    t0 = time.perf_counter()
+    tags = jax.block_until_ready(_prf_batch(r_hi, r_lo, s_hi, s_lo,
+                                            seed_arr, impl=impl))
+    r_th, r_tl, s_th, s_tl = (np.asarray(t) for t in tags)
+    join = lambda th, tl, n: ((th[:n].astype(np.uint64) << np.uint64(32))
+                              | tl[:n])
+    r_tags = [join(r_th[i], r_tl[i], int(r_n[i])) for i in range(b)]
+    s_tags = [join(s_th[i], s_tl[i], int(s_n[i])) for i in range(b)]
+    inters = _host_sorted_merge(r_tags, receiver_sets, s_tags, p, impl)
+    return EngineRound(inters, time.perf_counter() - t0, 2)
+
+
+def match_round(receiver_tags: Sequence[np.ndarray],
+                receiver_ids: Sequence[np.ndarray],
+                sender_tags: Sequence[np.ndarray], *,
+                impl: str = "pallas") -> EngineRound:
+    """One MPSI round of tag-matching pairs (RSA flavor: tags are
+    host-computed truncated signatures, already in [0, 2^62)).  Tags
+    originate on host, so sorting is always host-side: one merge
+    dispatch total."""
+    b = len(receiver_tags)
+    if b == 0:
+        return EngineRound([], 0.0, 0)
+    p = next_pow2(max(max((len(t) for t in receiver_tags), default=0),
+                      max((len(t) for t in sender_tags), default=0), 1))
+    _warm("merge", b, p, impl)
+    t0 = time.perf_counter()
+    r_tags = [np.asarray(t, np.int64).astype(np.uint64)
+              for t in receiver_tags]
+    s_tags = [np.asarray(t, np.int64).astype(np.uint64)
+              for t in sender_tags]
+    inters = _host_sorted_merge(r_tags, receiver_ids, s_tags, p, impl)
+    return EngineRound(inters, time.perf_counter() - t0, 1)

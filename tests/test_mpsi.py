@@ -87,3 +87,41 @@ def test_property_all_topologies_agree(m, n, overlap, seed):
                for fn in (tree_mpsi, path_mpsi, star_mpsi)]
     for r in results:
         assert np.array_equal(r, core)
+
+
+# ------------------------------------------------------- device backend
+
+@pytest.mark.parametrize("topology", [tree_mpsi, path_mpsi, star_mpsi])
+@pytest.mark.parametrize("protocol", ["rsa", "oprf"])
+def test_device_backend_parity_and_accounting(topology, protocol):
+    """backend="device" must be byte-identical to backend="host": same
+    intersection, same modeled bytes/messages/rounds."""
+    sets, core = make_id_universe(5, [40, 90, 60, 120, 70], 0.6, seed=9)
+    host = topology(sets, protocol=protocol, use_he=False)
+    dev = topology(sets, protocol=protocol, use_he=False,
+                   backend="device")
+    assert np.array_equal(host.intersection, dev.intersection)
+    assert np.array_equal(dev.intersection, core)
+    assert host.total_bytes == dev.total_bytes
+    assert host.total_messages == dev.total_messages
+    assert host.rounds == dev.rounds
+
+
+def test_tree_device_batches_one_dispatch_per_round():
+    sets, _ = make_id_universe(10, 60, 0.6, seed=4)
+    res = tree_mpsi(sets, protocol="oprf", use_he=False, backend="device")
+    assert res.rounds == math.ceil(math.log2(10))
+    assert res.device_dispatches == res.rounds
+    host = tree_mpsi(sets, protocol="oprf", use_he=False)
+    assert host.device_dispatches == 0
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(2, 6), st.integers(5, 50),
+       st.floats(0.2, 0.9), st.integers(0, 100))
+def test_property_device_backend_all_topologies(m, n, overlap, seed):
+    sets, core = make_id_universe(m, n, overlap, seed=seed)
+    for proto in ("rsa", "oprf"):
+        for fn in (tree_mpsi, path_mpsi, star_mpsi):
+            res = fn(sets, protocol=proto, use_he=False, backend="device")
+            assert np.array_equal(res.intersection, core)

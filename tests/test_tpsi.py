@@ -65,3 +65,59 @@ def test_property_intersection_matches_set_semantics(sa, sb):
     for protocol in ("rsa", "oprf"):
         res = run_tpsi(protocol, a, b)
         assert list(res.intersection) == expect
+
+
+# ------------------------------------------------------- device backend
+
+@pytest.mark.parametrize("protocol", ["rsa", "oprf"])
+def test_device_backend_parity(protocol):
+    a = np.array([1, 5, 9, 12, 40], np.int64)
+    b = np.array([5, 7, 12, 99], np.int64)
+    host = run_tpsi(protocol, a, b, backend="host")
+    dev = run_tpsi(protocol, a, b, backend="device")
+    assert np.array_equal(host.intersection, dev.intersection)
+    # the cost model is backend-invariant by construction
+    assert (host.bytes_to_sender, host.bytes_to_receiver,
+            host.messages) == (dev.bytes_to_sender,
+                               dev.bytes_to_receiver, dev.messages)
+
+
+@pytest.mark.parametrize("protocol", ["rsa", "oprf"])
+@pytest.mark.parametrize("backend", ["host", "device"])
+def test_duplicate_ids_are_set_semantics(protocol, backend):
+    """PSI is over sets: duplicate inputs dedup at protocol entry (the
+    seed RSA path double-counted duplicate receiver ids, the OPRF dict
+    silently dropped them)."""
+    a = np.array([5, 5, 5, 1, 12, 12], np.int64)
+    b = np.array([12, 5, 5, 99], np.int64)
+    res = run_tpsi(protocol, a, b, backend=backend)
+    assert list(res.intersection) == [5, 12]
+    # bytes are modeled on the canonical (unique) sizes
+    other = run_tpsi(protocol, np.unique(a), np.unique(b),
+                     backend=backend)
+    assert res.total_bytes == other.total_bytes
+
+
+@pytest.mark.parametrize("protocol", ["rsa", "oprf"])
+@pytest.mark.parametrize("backend", ["host", "device"])
+def test_empty_sets(protocol, backend):
+    empty = np.array([], np.int64)
+    some = np.arange(10, dtype=np.int64)
+    for a, b in ((empty, empty), (empty, some), (some, empty)):
+        res = run_tpsi(protocol, a, b, backend=backend)
+        assert res.intersection.size == 0
+        assert res.intersection.dtype == np.int64
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.integers(0, 500), max_size=40),
+       st.lists(st.integers(0, 500), max_size=40))
+def test_property_backends_agree_with_duplicates(la, lb):
+    a = np.array(la, np.int64)
+    b = np.array(lb, np.int64)
+    expect = sorted(set(la) & set(lb))
+    for protocol in ("rsa", "oprf"):
+        host = run_tpsi(protocol, a, b, backend="host")
+        dev = run_tpsi(protocol, a, b, backend="device")
+        assert list(host.intersection) == expect
+        assert list(dev.intersection) == expect

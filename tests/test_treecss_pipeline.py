@@ -74,7 +74,25 @@ def test_pipeline_reports_stage_times(parts):
     rep = run_pipeline(tr, te, CFG, variant="treecss",
                        clusters_per_client=4, seed=0)
     assert rep.align_seconds > 0
+    assert rep.align_wall_seconds > 0     # measured, not simulated
     assert rep.coreset_seconds > 0
     assert rep.train_seconds > 0
     assert rep.total_seconds == pytest.approx(
         rep.align_seconds + rep.coreset_seconds + rep.train_seconds)
+
+
+def test_pipeline_device_psi_backend(parts):
+    """End-to-end with the device alignment engine: identical aligned
+    set (so identical training data size) and a measured wall time."""
+    tr, te = parts
+    cfg = SplitNNConfig(model="knn", n_classes=2)
+    host = run_pipeline(tr, te, cfg, variant="treecss",
+                        clusters_per_client=4, seed=0)
+    dev = run_pipeline(tr, te, cfg, variant="treecss",
+                       clusters_per_client=4, seed=0,
+                       psi_backend="device")
+    assert np.array_equal(host.mpsi.intersection, dev.mpsi.intersection)
+    assert host.mpsi.total_bytes == dev.mpsi.total_bytes
+    assert host.n_train == dev.n_train
+    assert dev.align_wall_seconds > 0
+    assert dev.mpsi.device_dispatches >= 1
