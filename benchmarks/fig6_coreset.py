@@ -58,6 +58,7 @@ def run(quick: bool = True):
                             (ours <= theirs)) else "vcoreset")))
     emit(rows, "fig6_coreset")
     run_kmeans_perf(quick=quick)
+    run_css_shard_sweep(quick=quick)
 
 
 # ------------------------------------------------------ CSS k-means engine
@@ -128,6 +129,47 @@ def run_kmeans_perf(quick: bool = True, sizes=None):
                              speedup_vs_onehot_ref=fmt(base / secs, 2),
                              pallas_interpret=int(INTERPRET)))
     emit(rows, "fig6_kmeans_perf")
+
+
+def run_css_shard_sweep(quick: bool = True, sizes=None):
+    """Device-count sweep of the sharded batched-client CSS fit
+    (DESIGN.md §5): M=8 clients cluster_coreset with the client batch
+    shard_mapped over 1..D devices; selection must stay byte-identical
+    at every device count.  On virtual CPU devices (the CI job) the
+    wall-clock proves the path runs; speedups need real chips.
+    """
+    from repro.core.coreset import cluster_coreset
+    from repro.data.vertical import VerticalPartition
+    from repro.launch.mesh import make_data_mesh
+
+    sizes = sizes or ([20_000] if quick else [100_000, 500_000])
+    m, d_m, k = 8, 8, 12
+    n_dev = len(jax.devices())
+    counts = [c for c in (1, 2, 4, 8, 16) if c <= n_dev]
+    rng = np.random.default_rng(0)
+    rows = []
+    for n in sizes:
+        feats = [rng.normal(size=(n, d_m)).astype(np.float32)
+                 for _ in range(m)]
+        labels = rng.integers(0, 2, n)
+        part = VerticalPartition(feats, labels,
+                                 [slice(i * d_m, (i + 1) * d_m)
+                                  for i in range(m)])
+        base = None
+        for c in counts:
+            mesh = None if c == 1 else make_data_mesh(c)
+            res = cluster_coreset(part, k, seed=0, kmeans_iters=10,
+                                  mesh=mesh)
+            if base is None:
+                base = res
+            assert np.array_equal(res.indices, base.indices), c
+            assert np.array_equal(res.weights, base.weights), c
+            rows.append(dict(
+                n=n, clients=m, clusters=k, devices=c, shards=res.shards,
+                fit_seconds=fmt(sum(res.per_client_seconds), 4),
+                makespan_seconds=fmt(res.makespan_seconds, 4),
+                coreset=len(res.indices), parity_vs_1dev=1))
+    emit(rows, "fig6_css_shard")
 
 
 if __name__ == "__main__":

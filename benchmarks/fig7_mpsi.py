@@ -74,6 +74,7 @@ def run(quick: bool = True):
             base_mbytes=fmt(r_base.total_bytes / 1e6)))
     emit(rows, "fig7c_scheduling")
     run_psi_engine_perf(quick=quick)
+    run_psi_shard_sweep(quick=quick)
 
 
 # ---------------------------------------------------------- PSI engine
@@ -145,6 +146,56 @@ def run_psi_engine_perf(quick: bool = True, sizes=None):
                 pallas_interpret=int(INTERPRET),
                 merge_ref_fallback=int(fallback)))
     emit(rows, "fig7_psi_engine")
+
+
+def run_psi_shard_sweep(quick: bool = True, sizes=None):
+    """Device-count sweep of the sharded MPSI round (DESIGN.md §5): one
+    8-pair OPRF round batched through the engine with its pair batch
+    shard_mapped over 1..D devices.  On virtual CPU devices
+    (``--xla_force_host_platform_device_count=8``, the CI job) the
+    wall-clock mostly proves the path runs and stays byte-identical;
+    speedups become meaningful on real multi-chip hardware.
+    """
+    import jax
+
+    from repro.launch.mesh import make_data_mesh
+    from repro.psi import engine as psi_engine
+
+    sizes = sizes or ([20_000] if quick else [100_000, 500_000])
+    n_dev = len(jax.devices())
+    counts = [c for c in (1, 2, 4, 8, 16) if c <= n_dev]
+    rng = np.random.default_rng(0)
+    rows = []
+    for n in sizes:
+        senders, receivers, seeds, baseline = [], [], [], None
+        for i in range(8):
+            universe = rng.choice(3 * n, size=int(1.5 * n), replace=False)
+            senders.append(np.sort(universe[:n]).astype(np.int64))
+            receivers.append(np.sort(
+                universe[n // 2:n // 2 + n]).astype(np.int64))
+            seeds.append((int(rng.integers(0, 2**32)),
+                          int(rng.integers(0, 2**32))))
+        for c in counts:
+            mesh = None if c == 1 else make_data_mesh(c)
+            eng = lambda: psi_engine.oprf_round(
+                senders, receivers, seeds, impl="pallas", sort="host",
+                mesh=mesh)
+            eng()                      # compile + warm the jit cache
+            secs, rnd = np.inf, None
+            for _ in range(3):
+                t0 = time.perf_counter()
+                rnd = eng()
+                secs = min(secs, time.perf_counter() - t0)
+            if baseline is None:
+                baseline = rnd.intersections
+            assert all(np.array_equal(a, b) for a, b in
+                       zip(rnd.intersections, baseline)), c
+            rows.append(dict(
+                n_per_pair=n, pairs=8, devices=c, shards=rnd.shards,
+                seconds=fmt(secs, 4),
+                melem_per_s=fmt(16 * n / secs / 1e6, 2),
+                parity_vs_1dev=1))
+    emit(rows, "fig7_psi_shard")
 
 
 if __name__ == "__main__":

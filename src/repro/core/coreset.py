@@ -33,6 +33,8 @@ import numpy as np
 from repro.core import he
 from repro.core.kmeans import kmeans, kmeans_fit
 from repro.data.vertical import VerticalPartition
+from repro.sharding import batch_shard_map, pad_batch_rows, \
+    resolve_batch_mesh
 
 
 @dataclasses.dataclass
@@ -57,6 +59,7 @@ class CoresetResult:
     per_client_seconds: List[float] = dataclasses.field(default_factory=list)
     select_seconds: float = 0.0
     batched: bool = False     # clients fit via one vmap'd device call
+    shards: int = 1           # mesh-axis size the client batch split over
 
     @property
     def makespan_seconds(self) -> float:
@@ -164,71 +167,131 @@ def _he_exchange_cost(local: Sequence[ClientClustering], n: int,
 
 def clients_batchable(features: Sequence[np.ndarray], *,
                       algo: str = "lloyd",
-                      batch_clients: str = "auto") -> bool:
-    """True when steps 1-2 will run through the vmap'd batched path."""
+                      batch_clients: str = "auto",
+                      clusters: Optional[int] = None) -> bool:
+    """True when steps 1-2 will run through the vmap'd batched path.
+
+    Same-shape clients always batch; ragged (unequal ``(N, d_m)``)
+    clients batch through the pad-and-mask path UNLESS some client has
+    fewer samples than ``clusters`` — that client would need its own
+    smaller k (k is static under vmap), so those fall back to the
+    sequential loop."""
     feats = list(features)
-    return (batch_clients != "never" and algo == "lloyd"
-            and len(feats) > 1
-            and len({f.shape for f in feats}) == 1)
+    if batch_clients == "never" or algo != "lloyd" or len(feats) <= 1:
+        return False
+    if len({f.shape for f in feats}) == 1:
+        return True
+    min_n = min(f.shape[0] for f in feats)
+    return min_n >= 1 and (clusters is None or min_n >= clusters)
 
 
 def _batched_local_clusterings(features: Sequence[np.ndarray], k: int, *,
-                               seed: int, iters: int, impl: str
-                               ) -> Tuple[List[ClientClustering], float]:
+                               seed: int, iters: int, impl: str,
+                               mesh=None,
+                               shard_axis: Optional[str] = None
+                               ) -> Tuple[List[ClientClustering], float,
+                                          int]:
     """Steps 1-2 for ALL clients in one vmap'd device call.
 
-    Same-shape client slices stack into an (M, N, d) batch and run through
-    a single ``jax.vmap``'d ``kmeans_fit`` — one XLA program instead of M
+    Client slices stack into an (M, N, d) batch and run through a single
+    ``jax.vmap``'d ``kmeans_fit`` — one XLA program instead of M
     sequential host dispatches, with per-client PRNG keys matching the
     sequential path's ``seed + 17*m`` schedule. Weight ranking stays on
     host (cheap, O(N log N) per client).
 
-    Returns (clusterings, seconds) where seconds excludes XLA compilation
-    (the program is AOT-compiled before the timed region, mirroring the
-    warm-jit protocol the sequential path relies on).
+    Ragged clients pad to (max N, max d): zero-padded feature columns
+    are exact (zero diffs add exact +0.0 to every distance and centroid
+    update), zero-padded rows are masked via ``kmeans_fit(n_valid=)``
+    (see its docstring), and each client's outputs slice back to its
+    true (N_m, d_m).
+
+    With ``mesh``, the client batch additionally shards over one mesh
+    axis via ``shard_map`` (DESIGN.md §5): M pads to a multiple of the
+    axis size with row-0 filler and each device fits M/axis clients —
+    the per-client program is unchanged, so results stay byte-identical
+    to the single-device batch.
+
+    Returns (clusterings, seconds, n_shards) where seconds excludes XLA
+    compilation (the program is AOT-compiled before the timed region,
+    mirroring the warm-jit protocol the sequential path relies on).
     """
     m = len(features)
-    n = features[0].shape[0]
-    k_eff = int(min(k, n))
-    stacked = jnp.asarray(np.stack(features), jnp.float32)     # (M, N, d)
-    keys = jnp.stack([jax.random.PRNGKey(seed + 17 * i) for i in range(m)])
-    fit = jax.jit(jax.vmap(functools.partial(kmeans_fit, k=k_eff,
-                                             iters=iters, impl=impl)))
-    compiled = fit.lower(keys, stacked).compile()
+    ns = [int(f.shape[0]) for f in features]
+    ds = [int(f.shape[1]) for f in features]
+    n_max, d_max = max(ns), max(ds)
+    ragged = len({f.shape for f in features}) > 1
+    k_eff = int(min(k, min(ns)))
+    keys = np.stack([np.asarray(jax.random.PRNGKey(seed + 17 * i))
+                     for i in range(m)])
+    if ragged:
+        stacked = np.zeros((m, n_max, d_max), np.float32)
+        for i, f in enumerate(features):
+            stacked[i, :ns[i], :ds[i]] = f
+        n_valid = np.asarray(ns, np.int32)
+
+        def fit_batch(kk, pts, nv):
+            one = lambda kk1, p1, nv1: kmeans_fit(
+                kk1, p1, k_eff, iters=iters, impl=impl, n_valid=nv1)
+            return jax.vmap(one)(kk, pts, nv)
+        args: Tuple = (keys, stacked, n_valid)
+    else:
+        stacked = np.stack(features).astype(np.float32)    # (M, N, d)
+
+        def fit_batch(kk, pts):
+            return jax.vmap(functools.partial(
+                kmeans_fit, k=k_eff, iters=iters, impl=impl))(kk, pts)
+        args = (keys, stacked)
+
+    mesh, axis, n_shards = resolve_batch_mesh(mesh, shard_axis)
+    fn = fit_batch
+    if mesh is not None:
+        fn = batch_shard_map(fit_batch, mesh, axis)
+        args, _ = pad_batch_rows(args, n_shards)
+    compiled = jax.jit(fn).lower(*args).compile()
     t0 = time.perf_counter()
-    cents, assign, sqd = jax.block_until_ready(compiled(keys, stacked))
+    cents, assign, sqd = jax.block_until_ready(compiled(*args))
+    t_exec = time.perf_counter() - t0
     cents, assign, sqd = (np.asarray(cents), np.asarray(assign),
                           np.asarray(sqd))
     local = [
-        ClientClustering(assign[i].astype(np.int32),
-                         sqd[i].astype(np.float32),
-                         rank_weights(assign[i], sqd[i], k_eff), cents[i])
+        ClientClustering(assign[i, :ns[i]].astype(np.int32),
+                         sqd[i, :ns[i]].astype(np.float32),
+                         rank_weights(assign[i, :ns[i]], sqd[i, :ns[i]],
+                                      k_eff),
+                         cents[i][:, :ds[i]])
         for i in range(m)
     ]
-    return local, time.perf_counter() - t0
+    return local, t_exec, n_shards
 
 
 def cluster_coreset(partition: VerticalPartition, clusters_per_client: int, *,
                     seed: int = 0, kmeans_iters: int = 25,
                     kmeans_impl: str = "ref", use_he: bool = False,
                     kmeans_algo: str = "lloyd",
-                    batch_clients: str = "auto") -> CoresetResult:
+                    batch_clients: str = "auto",
+                    mesh=None,
+                    shard_axis: Optional[str] = None) -> CoresetResult:
     """Full Cluster-Coreset over a vertical partition.
 
-    ``batch_clients``: "auto" runs all clients through one vmap'd fit when
-    their feature slices share a shape (Lloyd only); "never" forces the
-    sequential per-client host loop. The batched device call computes all
-    M same-shape fits at once, so its wall-clock / M approximates ONE
-    client's concurrent compute — recorded per client to keep
-    ``makespan_seconds`` on the documented max-over-clients model.
+    ``batch_clients``: "auto" runs all clients through one vmap'd fit
+    (Lloyd only) — same-shape slices directly, ragged slices through the
+    pad-and-mask path; "never" forces the sequential per-client host
+    loop. The batched device call computes all M fits at once, so its
+    wall-clock / M approximates ONE client's concurrent compute —
+    recorded per client to keep ``makespan_seconds`` on the documented
+    max-over-clients model.  ``mesh`` shards the client batch over one
+    mesh axis (``shard_axis`` or the mesh's data axis) so CSS scales
+    past single-device memory; selection stays byte-identical.
     """
     feats = list(partition.client_features)
+    n_shards = 1
     batchable = clients_batchable(feats, algo=kmeans_algo,
-                                  batch_clients=batch_clients)
+                                  batch_clients=batch_clients,
+                                  clusters=clusters_per_client)
     if batchable:
-        local, t_exec = _batched_local_clusterings(
+        local, t_exec, n_shards = _batched_local_clusterings(
             feats, clusters_per_client, seed=seed, iters=kmeans_iters,
-            impl=kmeans_impl)
+            impl=kmeans_impl, mesh=mesh, shard_axis=shard_axis)
         per_client = [t_exec / len(feats)] * len(feats)
     else:
         local = []
@@ -246,4 +309,5 @@ def cluster_coreset(partition: VerticalPartition, clusters_per_client: int, *,
     return CoresetResult(indices=idx, weights=w, n_groups=n_groups,
                          comm_bytes=comm, he_seconds=he_secs, local=local,
                          per_client_seconds=per_client,
-                         select_seconds=select_secs, batched=batchable)
+                         select_seconds=select_secs, batched=batchable,
+                         shards=n_shards)

@@ -36,8 +36,16 @@ def _update(points, centroids, impl: str):
     return ref.kmeans_update(points, centroids)
 
 
-def kmeans_pp_init(key, points: jnp.ndarray, k: int) -> jnp.ndarray:
-    """k-means++ seeding (D² sampling)."""
+def kmeans_pp_init(key, points: jnp.ndarray, k: int,
+                   n_valid=None) -> jnp.ndarray:
+    """k-means++ seeding (D² sampling).
+
+    ``n_valid`` (traced or concrete) marks rows past it as zero-vector
+    padding (the ragged batched-client path): their D² mass is zeroed so
+    they can never be sampled — ``jax.random.choice`` inverts the cumsum
+    of p, and trailing zero-probability rows leave every cumsum boundary
+    (and so every draw) identical to the unpadded run.
+    """
     n, d = points.shape
 
     def body(carry, i):
@@ -48,12 +56,16 @@ def kmeans_pp_init(key, points: jnp.ndarray, k: int) -> jnp.ndarray:
         new_c = points[idx]
         cents = cents.at[i].set(new_c)
         nd = jnp.sum(jnp.square(points - new_c[None]), axis=1)
+        # padded rows keep dists == 0: min(0, nd>=0) stays 0
         return (cents, jnp.minimum(dists, nd), key), None
 
     key, sub = jax.random.split(key)
-    first = points[jax.random.randint(sub, (), 0, n)]
+    first = points[jax.random.randint(
+        sub, (), 0, n if n_valid is None else n_valid)]
     cents0 = jnp.zeros((k, d), points.dtype).at[0].set(first)
     d0 = jnp.sum(jnp.square(points - first[None]), axis=1)
+    if n_valid is not None:
+        d0 = jnp.where(jnp.arange(n) < n_valid, d0, 0.0)
     (cents, _, _), _ = jax.lax.scan(body, (cents0, d0, key),
                                     jnp.arange(1, k))
     return cents
@@ -61,16 +73,34 @@ def kmeans_pp_init(key, points: jnp.ndarray, k: int) -> jnp.ndarray:
 
 @functools.partial(jax.jit, static_argnames=("k", "iters", "impl"))
 def kmeans_fit(key, points: jnp.ndarray, k: int, *, iters: int = 25,
-               impl: str = "ref") -> Tuple[jnp.ndarray, jnp.ndarray,
-                                           jnp.ndarray]:
-    """Returns (centroids (K,d), assign (N,) int32, sq-distances (N,) f32)."""
+               impl: str = "ref", n_valid=None
+               ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (centroids (K,d), assign (N,) int32, sq-distances (N,) f32).
+
+    ``n_valid`` enables the pad-and-mask contract for the ragged batched
+    path (DESIGN.md §5): rows at and past it must be all-zero padding.
+    Zero rows add exact +0.0 to every cluster sum, so only the count of
+    the cluster they land in needs correcting — computed with the SAME
+    assign kernel so tie-breaks match — and the empty-cluster reseed
+    masks them out of the farthest-point argmax.  The caller slices
+    assign/sqd back to its true row count.
+    """
     points = points.astype(jnp.float32)
     n, d = points.shape
-    centroids = kmeans_pp_init(key, points, k)
+    centroids = kmeans_pp_init(key, points, k, n_valid=n_valid)
 
     def step(carry, _):
         cents, rk = carry
-        _, sqd, sums, counts = _update(points, cents, impl)
+        assign, sqd, sums, counts = _update(points, cents, impl)
+        if n_valid is not None:
+            # the cluster the zero-vector padding rows were assigned to,
+            # read from the SAME update pass that produced counts (row
+            # n-1 is padding whenever any padding exists; when
+            # n_valid == n the correction multiplies by zero anyway)
+            pad_c = assign[n - 1]
+            counts = counts - (n - n_valid) * (
+                jnp.arange(k) == pad_c).astype(counts.dtype)
+            sqd = jnp.where(jnp.arange(n) < n_valid, sqd, -1.0)
         new_cents = sums / jnp.maximum(counts, 1.0)[:, None]
         # empty clusters: re-seed at the globally farthest point
         far = points[jnp.argmax(sqd)]

@@ -106,7 +106,8 @@ def _greedy_pairs(order: Sequence[int]) -> Tuple[List[Tuple[int, int]],
 
 def _device_round(roles: List[Tuple[int, int]],
                   holdings: Dict[int, np.ndarray], protocol: str,
-                  engine_impl: str, bandwidth: float, latency: float
+                  engine_impl: str, bandwidth: float, latency: float,
+                  mesh=None, shard_axis=None
                   ) -> Tuple[List[np.ndarray], int, int, float, float]:
     """Run one round's concurrent (sender, receiver) pairs as a single
     batched engine dispatch.
@@ -131,7 +132,8 @@ def _device_round(roles: List[Tuple[int, int]],
         rng = oprf_session_rng()
         seeds = [oprf_seed_words(rng) for _ in roles]
         eng = psi_engine.oprf_round(senders, receivers, seeds,
-                                    impl=engine_impl)
+                                    impl=engine_impl, mesh=mesh,
+                                    shard_axis=shard_axis)
         host_secs = [0.0] * len(roles)
         for s_ids, r_ids in zip(senders, receivers):
             b_s, b_r, msgs = oprf_accounting(len(s_ids), len(r_ids))
@@ -154,7 +156,8 @@ def _device_round(roles: List[Tuple[int, int]],
             round_msgs += msgs
             net_secs.append(_net_time(b_s + b_r, bandwidth, latency, msgs))
         eng = psi_engine.match_round(r_tags_l, r_vals_l, s_tags_l,
-                                     impl=engine_impl)
+                                     impl=engine_impl, mesh=mesh,
+                                     shard_axis=shard_axis)
 
     compute = sum(host_secs) + eng.device_seconds
     makespan = (max(host_secs, default=0.0) + eng.device_seconds
@@ -167,9 +170,11 @@ def tree_mpsi(id_sets: Sequence[np.ndarray], *, protocol: str = "rsa",
               bandwidth: float = DEFAULT_BANDWIDTH,
               latency: float = DEFAULT_LATENCY,
               use_he: bool = True, backend: str = "host",
-              engine_impl: str = "pallas") -> MPSIStats:
+              engine_impl: str = "pallas", mesh=None,
+              shard_axis=None) -> MPSIStats:
     """Tree-MPSI over ``m`` id sets. O(log m) concurrent rounds; with
-    backend="device", O(log m) batched engine dispatches total."""
+    backend="device", O(log m) batched engine dispatches total, each
+    optionally sharded over a mesh axis (``mesh=``, DESIGN.md §5)."""
     m = len(id_sets)
     holdings: Dict[int, np.ndarray] = {i: canonical_ids(s) for i, s in
                                        enumerate(id_sets)}
@@ -205,7 +210,8 @@ def tree_mpsi(id_sets: Sequence[np.ndarray], *, protocol: str = "rsa",
 
         if backend == "device":
             inters, r_bytes, r_msgs, r_compute, r_makespan = _device_round(
-                roles, holdings, protocol, engine_impl, bandwidth, latency)
+                roles, holdings, protocol, engine_impl, bandwidth, latency,
+                mesh, shard_axis)
             for (sender, receiver), inter in zip(roles, inters):
                 holdings[receiver] = inter
             total_bytes += r_bytes
@@ -250,7 +256,8 @@ def path_mpsi(id_sets: Sequence[np.ndarray], *, protocol: str = "rsa",
               bandwidth: float = DEFAULT_BANDWIDTH,
               latency: float = DEFAULT_LATENCY,
               use_he: bool = True, backend: str = "host",
-              engine_impl: str = "pallas") -> MPSIStats:
+              engine_impl: str = "pallas", mesh=None,
+              shard_axis=None) -> MPSIStats:
     """Path topology: client i TPSIs with client i+1 — O(m) sequential
     rounds (data-dependent, so the device backend runs one batch-of-one
     dispatch per hop)."""
@@ -262,7 +269,8 @@ def path_mpsi(id_sets: Sequence[np.ndarray], *, protocol: str = "rsa",
     schedule: List[List[Tuple[int, int]]] = []
     for i in range(1, m):
         res = run_tpsi(protocol, cur, np.asarray(id_sets[i]),
-                       backend=backend, engine_impl=engine_impl)
+                       backend=backend, engine_impl=engine_impl,
+                       mesh=mesh, shard_axis=shard_axis)
         cur = res.intersection
         total_bytes += res.total_bytes
         total_msgs += res.messages
@@ -286,7 +294,8 @@ def star_mpsi(id_sets: Sequence[np.ndarray], *, protocol: str = "rsa",
               center: int = 0, bandwidth: float = DEFAULT_BANDWIDTH,
               latency: float = DEFAULT_LATENCY,
               use_he: bool = True, backend: str = "host",
-              engine_impl: str = "pallas") -> MPSIStats:
+              engine_impl: str = "pallas", mesh=None,
+              shard_axis=None) -> MPSIStats:
     """Star topology: the center TPSIs with every other client.
 
     O(1) logical rounds, but the central server engages the spokes one at a
@@ -307,7 +316,8 @@ def star_mpsi(id_sets: Sequence[np.ndarray], *, protocol: str = "rsa",
             continue
         # center acts as receiver (it accumulates the running intersection)
         res = run_tpsi(protocol, np.asarray(id_sets[i]), cur,
-                       backend=backend, engine_impl=engine_impl)
+                       backend=backend, engine_impl=engine_impl,
+                       mesh=mesh, shard_axis=shard_axis)
         cur = res.intersection
         total_bytes += res.total_bytes
         total_msgs += res.messages

@@ -205,7 +205,8 @@ def rsa_match_inputs(receiver_ids: np.ndarray, receiver_sigs: List[int],
 
 def tpsi_rsa(sender_ids: Sequence[int], receiver_ids: Sequence[int], *,
              key: RSAKey | None = None, backend: str = "host",
-             engine_impl: str = "pallas") -> TPSIResult:
+             engine_impl: str = "pallas", mesh=None,
+             shard_axis=None) -> TPSIResult:
     """RSA-blind-signature PSI. The RECEIVER learns the intersection.
 
     Wire protocol/bytes: see ``rsa_accounting``.  backend="device" keeps
@@ -224,7 +225,8 @@ def tpsi_rsa(sender_ids: Sequence[int], receiver_ids: Sequence[int], *,
         r_tags, r_vals, s_tags = rsa_match_inputs(r_ids, receiver_sigs,
                                                   sender_sigs)
         rnd = psi_engine.match_round([r_tags], [r_vals], [s_tags],
-                                     impl=engine_impl)
+                                     impl=engine_impl, mesh=mesh,
+                                     shard_axis=shard_axis)
         inter = rnd.intersections[0]
         t_match = rnd.device_seconds
     else:
@@ -267,7 +269,8 @@ def oprf_seed_words(rng) -> Tuple[int, int]:
 
 def tpsi_oprf(sender_ids: Sequence[int], receiver_ids: Sequence[int], *,
               seed: int | None = None, backend: str = "host",
-              engine_impl: str = "pallas") -> TPSIResult:
+              engine_impl: str = "pallas", mesh=None,
+              shard_axis=None) -> TPSIResult:
     """OPRF(OT-extension)-style PSI (KKRT pattern). The RECEIVER learns the
     intersection.
 
@@ -289,7 +292,8 @@ def tpsi_oprf(sender_ids: Sequence[int], receiver_ids: Sequence[int], *,
         from repro.psi import engine as psi_engine
         rnd = psi_engine.oprf_round([s_ids], [r_ids],
                                     [oprf_seed_words(rng)],
-                                    impl=engine_impl)
+                                    impl=engine_impl, mesh=mesh,
+                                    shard_axis=shard_axis)
         inter = rnd.intersections[0]
         # one joint dispatch evaluates both parties' tags: split evenly
         t_send = t_recv = rnd.device_seconds / 2.0

@@ -46,13 +46,20 @@ class PipelineReport:
 
 
 def _align(partition: VerticalPartition, topology: str, *, overlap: float,
-           protocol: str, seed: int, psi_backend: str = "host"
+           protocol: str, seed: int, psi_backend: str = "host",
+           mesh=None, shard_axis: Optional[str] = None
            ) -> Tuple[VerticalPartition, MPSIStats, float, float]:
     """Run MPSI over per-client ID sets and restrict data to the aligned set.
 
     Each client's ID list covers the same underlying rows; ``overlap`` of
     them are common (the paper's 70% synthetic setting maps row-indices to
     IDs so alignment has real work to do).
+
+    Row ↔ id map: row i of the partition carries id ``sets[0][i]`` — the
+    label owner's local ordering, which ``make_id_universe`` shuffles, so
+    aligned ids are scattered through the row space (NOT a prefix).  The
+    aligned partition is exactly the rows whose ids the MPSI
+    intersection returned, in ascending row order.
 
     Returns (aligned, stats, simulated_seconds, wall_seconds): the
     simulated makespan drives the paper's cost model; the measured wall
@@ -61,15 +68,17 @@ def _align(partition: VerticalPartition, topology: str, *, overlap: float,
     n = partition.n_samples
     m = partition.n_clients
     sets, _core = make_id_universe(m, n, overlap, seed=seed)
-    # Deterministic row←id map: row i has id = sets[0][perm[i]] for the ids
-    # every client shares; MPSI returns the common subset.
     t0 = time.perf_counter()
-    stats = MPSI[topology](sets, protocol=protocol, backend=psi_backend)
+    stats = MPSI[topology](sets, protocol=protocol, backend=psi_backend,
+                           mesh=mesh, shard_axis=shard_axis)
     align_wall = time.perf_counter() - t0
     inter = stats.intersection
-    # map intersection ids -> rows: the shared core ids correspond to the
-    # first len(core) rows of every client's local ordering by construction
-    rows = np.arange(min(len(inter), n))
+    # id -> row: invert the label owner's id list (ids are unique, and
+    # inter ⊆ sets[0] because it intersects every client's set)
+    row_ids = np.asarray(sets[0], np.int64)
+    order = np.argsort(row_ids)
+    pos = np.searchsorted(row_ids, inter, sorter=order)
+    rows = np.sort(order[pos])
     aligned = partition.take(rows)
     return aligned, stats, stats.simulated_seconds, align_wall
 
@@ -85,7 +94,13 @@ def run_pipeline(train_part: VerticalPartition,
                  use_weights: bool = True,
                  kmeans_impl: str = "ref",
                  seed: int = 0,
-                 knn_k: int = 5) -> PipelineReport:
+                 knn_k: int = 5,
+                 mesh=None,
+                 shard_axis: Optional[str] = None) -> PipelineReport:
+    """``mesh`` (with optional ``shard_axis``) shards both device-path
+    stages over one mesh axis: the PSI engine's per-round pair batch
+    (``psi_backend="device"``) and the CSS batched client fit — results
+    are byte-identical to the single-device run (DESIGN.md §5)."""
     variant = variant.lower()
     topology = "tree" if variant.startswith("tree") else (
         "path" if variant.startswith("path") else "star")
@@ -93,13 +108,15 @@ def run_pipeline(train_part: VerticalPartition,
 
     aligned, mpsi_stats, align_secs, align_wall = _align(
         train_part, topology, overlap=overlap, protocol=protocol,
-        seed=seed, psi_backend=psi_backend)
+        seed=seed, psi_backend=psi_backend, mesh=mesh,
+        shard_axis=shard_axis)
 
     coreset_res = None
     weights = None
     if use_css:
         from repro.core.coreset import clients_batchable
-        if not clients_batchable(aligned.client_features):
+        if not clients_batchable(aligned.client_features,
+                                 clusters=clusters_per_client):
             # sequential path: warm the kmeans jit cache on the exact
             # shapes so stage timing compares protocols, not XLA
             # compilation (the batched path AOT-compiles internally)
@@ -108,7 +125,8 @@ def run_pipeline(train_part: VerticalPartition,
                 _km(f, min(clusters_per_client, f.shape[0]), seed=seed,
                     impl=kmeans_impl)
         coreset_res = cluster_coreset(
-            aligned, clusters_per_client, seed=seed, kmeans_impl=kmeans_impl)
+            aligned, clusters_per_client, seed=seed, kmeans_impl=kmeans_impl,
+            mesh=mesh, shard_axis=shard_axis)
         train_data = aligned.take(coreset_res.indices)
         if use_weights:
             weights = coreset_res.weights

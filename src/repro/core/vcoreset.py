@@ -45,13 +45,29 @@ def leverage_scores(partition: VerticalPartition, *,
 
 def vcoreset(partition: VerticalPartition, size: int, *, seed: int = 0
              ) -> Tuple[np.ndarray, np.ndarray]:
-    """Importance-sample ``size`` rows by leverage. Returns (idx, weights)."""
+    """Importance-sample ``size`` rows by leverage. Returns (idx, weights).
+
+    Sampling is WITH replacement, as in Huang et al.: the ``1/(T·p_i)``
+    sensitivity weights are the with-replacement estimator, and
+    replacement keeps the draw well-defined when fewer than ``size``
+    leverage scores are nonzero (rank-deficient feature blocks zero out
+    most of ``p``, which made ``replace=False`` raise).  Duplicate draws
+    dedup afterwards by accumulating their weight (c_i draws of row i
+    weigh ``c_i/(T·p_i)``), so the returned index set is unique/sorted —
+    possibly smaller than ``size``, matching the multiset's total mass.
+    """
     rng = np.random.default_rng(seed)
     lev = leverage_scores(partition)
-    p = lev / lev.sum()
     n = partition.n_samples
+    # clamp fp-negative scores and renormalize; a degenerate all-zero /
+    # non-finite vector falls back to uniform sampling
+    lev = np.where(np.isfinite(lev), np.maximum(lev, 0.0), 0.0)
+    total = lev.sum()
+    p = lev / total if total > 0 else np.full(n, 1.0 / n)
+    p = p / p.sum()
     size = min(size, n)
-    idx = rng.choice(n, size=size, replace=False, p=p)
-    w = 1.0 / (size * p[idx])
+    draws = rng.choice(n, size=size, replace=True, p=p)
+    idx, counts = np.unique(draws, return_counts=True)   # sorted unique
+    w = counts / (size * p[idx])
     w = w / w.mean()  # normalize scale for comparable LR tuning
-    return np.sort(idx), w[np.argsort(idx)].astype(np.float32)
+    return idx.astype(np.int64), w.astype(np.float32)

@@ -15,8 +15,26 @@ VMEM residency/layout contract that Mosaic compiles on real TPU
 
 VMEM bound: 2 key lanes × 2P × 4B resident (plus the rank cumsum), so a
 single block handles P up to PALLAS_MAX_P = 2^19 per core on a
-16 MB-VMEM TPU; past that bound ops.py falls back to the jnp ref path
-(a tiled multi-pass merge is a ROADMAP follow-on).
+16 MB-VMEM TPU.  Past that bound ``sorted_intersect_tiled`` runs the
+SAME merge network as a multi-pass grid schedule (DESIGN.md §5): the
+bitonic network is oblivious, so its stages split freely across
+dispatches —
+
+  cross passes   stride s ≥ chunk/2: one grid kernel per stage; every
+                 grid step loads one (x, y) tile pair at distance s,
+                 compare-exchanges elementwise, writes it back
+                 (input/output aliased, so VMEM holds one tile pair).
+  local pass     strides < chunk/2: one grid kernel over contiguous
+                 chunks; each chunk runs all its remaining stages
+                 VMEM-resident, exactly the single-block kernel at
+                 chunk scale.
+
+Stage-for-stage the tiled schedule performs the identical
+compare-exchanges in the identical order, so its outputs are bitwise
+equal to the single-block kernel and the jnp ref.  Selection/rank
+recovery (elementwise predecessor compare + one cumsum) streams over
+the merged lanes outside the kernels — it has no cross-stage VMEM
+residency to exploit.
 
 Padding contract (ops.py): P is a power of two; A pads with PAD_A,
 B with PAD_B — distinct sentinels with the top bit set, so pads sort
@@ -59,3 +77,95 @@ def sorted_intersect_pallas(a_kh, a_kl, b_kh, b_kl, *,
                   [jax.ShapeDtypeStruct((two_p,), jnp.uint32)] * 2,
         interpret=interpret,
     )(a_kh, a_kl, b_kh, b_kl)
+
+
+# --------------------------------------------------- tiled multi-pass merge
+
+def _cross_stage_kernel(kh_ref, kl_ref, okh_ref, okl_ref):
+    """One compare-exchange stage tile: block (1, 2, T) holds the x tile
+    (dim-1 index 0) and its partner y tile at distance s (index 1)."""
+    xh, yh = kh_ref[0, 0, :], kh_ref[0, 1, :]
+    xl, yl = kl_ref[0, 0, :], kl_ref[0, 1, :]
+    swap = (xh > yh) | ((xh == yh) & (xl > yl))
+    okh_ref[0, 0, :] = jnp.where(swap, yh, xh)
+    okh_ref[0, 1, :] = jnp.where(swap, xh, yh)
+    okl_ref[0, 0, :] = jnp.where(swap, yl, xl)
+    okl_ref[0, 1, :] = jnp.where(swap, xl, yl)
+
+
+def _cross_stage(kh, kl, s: int, tile: int, interpret: bool):
+    """Stride-s compare-exchange over length-L lanes as a grid pass.
+
+    Reshaping to (L/2s, 2, s) puts every (c[i], c[i+s]) pair at dim-1
+    indices (0, 1) of one row, so a (1, 2, T) block is a self-contained
+    tile pair and the grid streams s/T tiles per 2s-block through VMEM.
+    """
+    length = kh.shape[0]
+    r = length // (2 * s)
+    t = min(s, tile)
+    spec = pl.BlockSpec((1, 2, t), lambda i, j: (i, 0, j))
+    okh, okl = pl.pallas_call(
+        _cross_stage_kernel,
+        grid=(r, s // t),
+        in_specs=[spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((r, 2, s), jnp.uint32)] * 2,
+        input_output_aliases={0: 0, 1: 1},
+        interpret=interpret,
+    )(kh.reshape(r, 2, s), kl.reshape(r, 2, s))
+    return okh.reshape(length), okl.reshape(length)
+
+
+def _local_stages_kernel(kh_ref, kl_ref, okh_ref, okl_ref):
+    """Finish all strides < chunk/2 with the chunk VMEM-resident."""
+    lanes = [kh_ref[0, :], kl_ref[0, :]]
+    s = lanes[0].shape[0] // 2
+    while s >= 1:
+        lanes = ref._compare_exchange(lanes, s)
+        s //= 2
+    okh_ref[0, :] = lanes[0]
+    okl_ref[0, :] = lanes[1]
+
+
+def _local_stages(kh, kl, chunk: int, interpret: bool):
+    length = kh.shape[0]
+    g = length // chunk
+    spec = pl.BlockSpec((1, chunk), lambda i: (i, 0))
+    okh, okl = pl.pallas_call(
+        _local_stages_kernel,
+        grid=(g,),
+        in_specs=[spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((g, chunk), jnp.uint32)] * 2,
+        input_output_aliases={0: 0, 1: 1},
+        interpret=interpret,
+    )(kh.reshape(g, chunk), kl.reshape(g, chunk))
+    return okh.reshape(length), okl.reshape(length)
+
+
+def sorted_intersect_tiled(a_kh, a_kl, b_kh, b_kl, *,
+                           interpret: bool = True,
+                           chunk_p: int = PALLAS_MAX_P,
+                           tile: int = PALLAS_MAX_P):
+    """Multi-pass merge for P past the single-block bound.  Same
+    signature/outputs as ``sorted_intersect_pallas``; ``chunk_p`` caps
+    the per-chunk VMEM residency at 2·chunk_p elements per lane and
+    ``tile`` the per-step footprint of the cross passes (defaults keep
+    both at the single-block bound; tests shrink them to exercise the
+    multi-pass structure at small P)."""
+    p = a_kh.shape[0]
+    assert p & (p - 1) == 0, p
+    chunk = min(2 * chunk_p, 2 * p)
+    kh = jnp.concatenate([a_kh, jnp.flip(b_kh)])
+    kl = jnp.concatenate([a_kl, jnp.flip(b_kl)])
+    s = p
+    while 2 * s > chunk:          # stages whose 2s-blocks exceed a chunk
+        kh, kl = _cross_stage(kh, kl, s, tile, interpret)
+        s //= 2
+    kh, kl = _local_stages(kh, kl, chunk, interpret)
+    origin = (kl & jnp.uint32(1)).astype(jnp.int32)
+    rank = jnp.cumsum(origin)
+    prev_match = (kh[1:] == kh[:-1]) & (kl[1:] == kl[:-1] + jnp.uint32(1))
+    sel = (jnp.concatenate([jnp.zeros((1,), bool), prev_match])
+           & (origin == 1) & (kh < jnp.uint32(ref.VALID_LIMIT)))
+    return sel.astype(jnp.int32), rank, kh, kl

@@ -19,7 +19,8 @@ import numpy as np
 from repro.kernels.padding import INTERPRET
 from repro.kernels.sorted_intersect import ref
 from repro.kernels.sorted_intersect.kernel import (PALLAS_MAX_P,
-                                                   sorted_intersect_pallas)
+                                                   sorted_intersect_pallas,
+                                                   sorted_intersect_tiled)
 from repro.kernels.sorted_intersect.ref import PAD_A, PAD_B
 
 
@@ -52,9 +53,13 @@ def sorted_intersect(a_kh: jnp.ndarray, a_kl: jnp.ndarray,
     p = next_pow2(max(a_kh.shape[0], b_kh.shape[0]))
     a_kh, a_kl = _pad_side(a_kh, a_kl, PAD_A, p)
     b_kh, b_kl = _pad_side(b_kh, b_kl, PAD_B, p)
-    # past the kernel's single-block VMEM bound the jnp ref takes over
-    # (a tiled multi-pass device merge is a ROADMAP follow-on)
-    if impl == "ref" or p > PALLAS_MAX_P:
+    if impl == "ref":
         return ref.sorted_intersect(a_kh, a_kl, b_kh, b_kl)
+    # past the single-block VMEM bound the same merge network runs as a
+    # multi-pass grid schedule (cross-stage passes + VMEM-resident chunk
+    # finish) — bitwise-identical outputs, no jnp fallback
+    if p > PALLAS_MAX_P:
+        return sorted_intersect_tiled(a_kh, a_kl, b_kh, b_kl,
+                                      interpret=INTERPRET)
     return sorted_intersect_pallas(a_kh, a_kl, b_kh, b_kl,
                                    interpret=INTERPRET)

@@ -20,3 +20,21 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """1-device mesh for CPU smoke tests (same axis names as production)."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_data_mesh(n_devices: int | None = None):
+    """1-D ``("data",)`` mesh for the PSI/CSS batch-sharding paths
+    (DESIGN.md §5) over the first ``n_devices`` local devices (all by
+    default).  Works with real accelerators and with virtual CPU devices
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=8``), which is
+    how CI exercises shard_map on every PR."""
+    import numpy as np
+
+    devices = jax.devices()
+    if n_devices is not None:
+        if n_devices > len(devices):
+            raise ValueError(
+                f"requested {n_devices} devices, have {len(devices)}")
+        devices = devices[:n_devices]
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(devices), ("data",))

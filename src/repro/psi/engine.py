@@ -25,7 +25,17 @@ Sorting between tag-eval and merge is mode-switched (``sort=``):
   "host"    two dispatches (tag-eval, then merge) with numpy's radix-
             class u64 sort between them — the fast path on CPU, where
             XLA's multi-operand comparator sort is ~30× slower than
-            numpy.  Default follows REPRO_PALLAS_INTERPRET.
+            numpy.  Default keys off the actual platform
+            (``jax.default_backend()``): a CPU backend gets "host"
+            whether or not the Pallas interpreter is on; accelerators
+            get "device".
+
+Sharding (``mesh=``): a round's (pairs, P) batch can split over one
+mesh axis — ``shard_axis`` or the mesh's data axis — via ``shard_map``
+(DESIGN.md §5).  The pair batch pads to a multiple of the axis size
+(row-0 filler, outputs truncated) and each device runs the identical
+per-pair program on its slice, so intersections stay byte-identical to
+the single-device path while per-device memory drops by the axis size.
 
 Id recovery uses the merge kernel's (sel, rank) outputs: ``rank`` is
 the receiver-element count in merged order, so a selected slot's id is
@@ -55,11 +65,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from repro.kernels.padding import INTERPRET
 from repro.kernels.psi_prf.ops import prf_tags
 from repro.kernels.sorted_intersect.ops import (next_pow2, pack_keys,
                                                 sorted_intersect)
 from repro.kernels.sorted_intersect.ref import PAD_A, PAD_B
+from repro.sharding import (batch_shard_map, pad_batch_rows, padded_rows,
+                            resolve_batch_mesh)
 
 TAG_MASK = (1 << 62) - 1     # engine tag space: 62-bit
 
@@ -75,10 +86,14 @@ class EngineRound:
     intersections: List[np.ndarray]   # per pair: sorted unique int64 ids
     device_seconds: float             # dispatches + in-between host sort
     dispatches: int = 1
+    shards: int = 1                   # mesh-axis size the batch split over
 
 
 def _default_sort(sort: Optional[str]) -> str:
-    return sort or ("host" if INTERPRET else "device")
+    """The sort mode the platform actually wants: numpy's radix-class
+    u64 sort on a CPU backend (XLA's CPU multi-operand sort is ~30×
+    slower), in-graph ``lax.sort`` on accelerators."""
+    return sort or ("host" if jax.default_backend() == "cpu" else "device")
 
 
 # ----------------------------------------------------------- lane packing
@@ -124,7 +139,6 @@ def _mask_pad(kh, kl, n, pad):
 
 # ------------------------------------------------------- jitted dispatches
 
-@functools.partial(jax.jit, static_argnames=("impl",))
 def _prf_batch(r_hi, r_lo, s_hi, s_lo, seeds, *, impl):
     """Tag both sides of every pair: (B,P) id lanes -> (B,P) tag lanes."""
     def one(rh, rl, sh, sl, sd):
@@ -133,7 +147,6 @@ def _prf_batch(r_hi, r_lo, s_hi, s_lo, seeds, *, impl):
     return jax.vmap(one)(r_hi, r_lo, s_hi, s_lo, seeds)
 
 
-@functools.partial(jax.jit, static_argnames=("impl",))
 def _merge_batch(a_kh, a_kl, b_kh, b_kl, *, impl):
     """(B,P) pre-sorted key lanes -> (B,2P) (sel, rank)."""
     def one(akh, akl, bkh, bkl):
@@ -142,7 +155,6 @@ def _merge_batch(a_kh, a_kl, b_kh, b_kl, *, impl):
     return jax.vmap(one)(a_kh, a_kl, b_kh, b_kl)
 
 
-@functools.partial(jax.jit, static_argnames=("impl",))
 def _oprf_single(r_hi, r_lo, r_n, s_hi, s_lo, s_n, seeds, *, impl):
     """Single-dispatch (device-sort) path: PRF + lax.sort + merge +
     in-graph id recovery.  Returns (B,2P) (sel, cand_hi, cand_lo)."""
@@ -163,27 +175,44 @@ def _oprf_single(r_hi, r_lo, r_n, s_hi, s_lo, s_n, seeds, *, impl):
     return jax.vmap(one)(r_hi, r_lo, r_n, s_hi, s_lo, s_n, seeds)
 
 
+_DISPATCH_BODY = {"prf": _prf_batch, "merge": _merge_batch,
+                  "single": _oprf_single}
+
+
+@functools.lru_cache(maxsize=None)
+def _dispatch(kind: str, impl: str, mesh=None, axis: Optional[str] = None):
+    """Jitted executable for one dispatch kind, optionally shard_mapped
+    so the pair batch splits over a mesh axis.  Cached per
+    (kind, impl, mesh, axis) so re-wrapping never re-jits."""
+    fn = functools.partial(_DISPATCH_BODY[kind], impl=impl)
+    if mesh is not None:
+        fn = batch_shard_map(fn, mesh, axis)
+    return jax.jit(fn)
+
+
 # ----------------------------------------------------- compile warm-up
 
 _warm_cache: set = set()
 
 
-def _warm(kind: str, b: int, p: int, impl: str) -> None:
-    """Compile a (dispatch, pairs, P, impl) bucket outside the timed
-    region: jit keys on shapes/dtypes only, so a zeros-input call
+def _warm(kind: str, b: int, p: int, impl: str, mesh=None,
+          axis: Optional[str] = None) -> None:
+    """Compile a (dispatch, pairs, P, impl, mesh) bucket outside the
+    timed region: jit keys on shapes/dtypes only, so a zeros-input call
     builds the executable the subsequent timed call reuses."""
-    key = (kind, b, p, impl)
+    key = (kind, b, p, impl, mesh, axis)
     if key in _warm_cache:
         return
+    fn = _dispatch(kind, impl, mesh, axis)
     z = np.zeros((b, p), np.uint32)
     n = np.zeros((b,), np.int32)
     seeds = np.zeros((b, 2), np.uint32)
     if kind == "prf":
-        out = _prf_batch(z, z, z, z, seeds, impl=impl)
+        out = fn(z, z, z, z, seeds)
     elif kind == "merge":
-        out = _merge_batch(z, z, z, z, impl=impl)
+        out = fn(z, z, z, z)
     else:
-        out = _oprf_single(z, z, n, z, z, n, seeds, impl=impl)
+        out = fn(z, z, n, z, z, n, seeds)
     jax.block_until_ready(out)
     _warm_cache.add(key)
 
@@ -193,7 +222,8 @@ def _warm(kind: str, b: int, p: int, impl: str) -> None:
 def _host_sorted_merge(r_tags64: Sequence[np.ndarray],
                        receiver_ids: Sequence[np.ndarray],
                        s_tags64: Sequence[np.ndarray], p: int,
-                       impl: str) -> List[np.ndarray]:
+                       impl: str, mesh=None, axis: Optional[str] = None,
+                       n_shards: int = 1) -> List[np.ndarray]:
     """Host-sort path shared by oprf_round and match_round: numpy-sort
     each pair's u64 tags, pack the padded key-lane batch, run the merge
     dispatch, and recover ids from (sel, rank)."""
@@ -209,10 +239,11 @@ def _host_sorted_merge(r_tags64: Sequence[np.ndarray],
         a_kh[i], a_kl[i] = _host_key_rows(r_tags64[i][order], 1, PAD_A, p)
         b_kh[i], b_kl[i] = _host_key_rows(np.sort(s_tags64[i]), 0,
                                           PAD_B, p)
-    sel_rank = jax.block_until_ready(_merge_batch(a_kh, a_kl, b_kh, b_kl,
-                                                  impl=impl))
-    sel = np.asarray(sel_rank[0]).astype(bool)
-    rank = np.asarray(sel_rank[1])
+    args, _ = pad_batch_rows((a_kh, a_kl, b_kh, b_kl), n_shards)
+    sel_rank = jax.block_until_ready(
+        _dispatch("merge", impl, mesh, axis)(*args))
+    sel = np.asarray(sel_rank[0])[:b].astype(bool)
+    rank = np.asarray(sel_rank[1])[:b]
     return [np.sort(ids_by_tag[i][rank[i][sel[i]] - 1])
             for i in range(b)]
 
@@ -221,17 +252,21 @@ def oprf_round(sender_sets: Sequence[np.ndarray],
                receiver_sets: Sequence[np.ndarray],
                seeds: Sequence[Tuple[int, int]], *,
                impl: str = "pallas",
-               sort: Optional[str] = None) -> EngineRound:
+               sort: Optional[str] = None,
+               mesh=None, shard_axis: Optional[str] = None) -> EngineRound:
     """One MPSI round of OPRF-flavor pairs, batched.
 
     ``seeds[i]`` is the pair's session key as two u32 words (the wire
     protocol still models the OT-extension seed agreement; see tpsi).
     Each receiver learns intersection(sender_sets[i], receiver_sets[i]).
+    With ``mesh``, the pair batch shards over one mesh axis (module
+    docstring) — intersections are byte-identical either way.
     """
     b = len(sender_sets)
     if b == 0:
         return EngineRound([], 0.0, 0)
     sort = _default_sort(sort)
+    mesh, axis, n_shards = resolve_batch_mesh(mesh, shard_axis)
     p = next_pow2(max(max((len(s) for s in sender_sets), default=0),
                       max((len(r) for r in receiver_sets), default=0), 1))
     s_hi, s_lo, s_n = _pack(sender_sets, p)
@@ -239,35 +274,43 @@ def oprf_round(sender_sets: Sequence[np.ndarray],
     seed_arr = np.asarray(seeds, np.uint32).reshape(b, 2)
 
     if sort == "device":
-        _warm("single", b, p, impl)
+        args, _ = pad_batch_rows(
+            (r_hi, r_lo, r_n, s_hi, s_lo, s_n, seed_arr), n_shards)
+        _warm("single", args[0].shape[0], p, impl, mesh, axis)
+        fn = _dispatch("single", impl, mesh, axis)
         t0 = time.perf_counter()
-        out = jax.block_until_ready(_oprf_single(
-            r_hi, r_lo, r_n, s_hi, s_lo, s_n, seed_arr, impl=impl))
-        sel = np.asarray(out[0]).astype(bool)
-        ids = (np.asarray(out[1], np.uint64) << np.uint64(32)) \
-            | np.asarray(out[2], np.uint64)
+        out = jax.block_until_ready(fn(*args))
+        sel = np.asarray(out[0])[:b].astype(bool)
+        ids = (np.asarray(out[1], np.uint64)[:b] << np.uint64(32)) \
+            | np.asarray(out[2], np.uint64)[:b]
         inters = [np.sort(ids[i][sel[i]].astype(np.int64))
                   for i in range(b)]
-        return EngineRound(inters, time.perf_counter() - t0, 1)
+        return EngineRound(inters, time.perf_counter() - t0, 1,
+                           shards=n_shards)
 
-    _warm("prf", b, p, impl)
-    _warm("merge", b, p, impl)
+    args, _ = pad_batch_rows((r_hi, r_lo, s_hi, s_lo, seed_arr), n_shards)
+    bp = args[0].shape[0]
+    _warm("prf", bp, p, impl, mesh, axis)
+    _warm("merge", bp, p, impl, mesh, axis)
+    fn = _dispatch("prf", impl, mesh, axis)
     t0 = time.perf_counter()
-    tags = jax.block_until_ready(_prf_batch(r_hi, r_lo, s_hi, s_lo,
-                                            seed_arr, impl=impl))
+    tags = jax.block_until_ready(fn(*args))
     r_th, r_tl, s_th, s_tl = (np.asarray(t) for t in tags)
     join = lambda th, tl, n: ((th[:n].astype(np.uint64) << np.uint64(32))
                               | tl[:n])
     r_tags = [join(r_th[i], r_tl[i], int(r_n[i])) for i in range(b)]
     s_tags = [join(s_th[i], s_tl[i], int(s_n[i])) for i in range(b)]
-    inters = _host_sorted_merge(r_tags, receiver_sets, s_tags, p, impl)
-    return EngineRound(inters, time.perf_counter() - t0, 2)
+    inters = _host_sorted_merge(r_tags, receiver_sets, s_tags, p, impl,
+                                mesh, axis, n_shards)
+    return EngineRound(inters, time.perf_counter() - t0, 2,
+                       shards=n_shards)
 
 
 def match_round(receiver_tags: Sequence[np.ndarray],
                 receiver_ids: Sequence[np.ndarray],
                 sender_tags: Sequence[np.ndarray], *,
-                impl: str = "pallas") -> EngineRound:
+                impl: str = "pallas",
+                mesh=None, shard_axis: Optional[str] = None) -> EngineRound:
     """One MPSI round of tag-matching pairs (RSA flavor: tags are
     host-computed truncated signatures, already in [0, 2^62)).  Tags
     originate on host, so sorting is always host-side: one merge
@@ -275,13 +318,16 @@ def match_round(receiver_tags: Sequence[np.ndarray],
     b = len(receiver_tags)
     if b == 0:
         return EngineRound([], 0.0, 0)
+    mesh, axis, n_shards = resolve_batch_mesh(mesh, shard_axis)
     p = next_pow2(max(max((len(t) for t in receiver_tags), default=0),
                       max((len(t) for t in sender_tags), default=0), 1))
-    _warm("merge", b, p, impl)
+    _warm("merge", padded_rows(b, n_shards), p, impl, mesh, axis)
     t0 = time.perf_counter()
     r_tags = [np.asarray(t, np.int64).astype(np.uint64)
               for t in receiver_tags]
     s_tags = [np.asarray(t, np.int64).astype(np.uint64)
               for t in sender_tags]
-    inters = _host_sorted_merge(r_tags, receiver_ids, s_tags, p, impl)
-    return EngineRound(inters, time.perf_counter() - t0, 1)
+    inters = _host_sorted_merge(r_tags, receiver_ids, s_tags, p, impl,
+                                mesh, axis, n_shards)
+    return EngineRound(inters, time.perf_counter() - t0, 1,
+                       shards=n_shards)

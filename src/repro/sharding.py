@@ -84,6 +84,81 @@ class use_mesh:
 
 # ------------------------------------------------------------ generic helpers
 
+try:  # jax >= 0.6: graduated to the top-level namespace
+    from jax import shard_map as _shard_map
+except ImportError:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+import inspect as _inspect
+
+# the replication-check kwarg was renamed check_rep -> check_vma in jax 0.6
+_SHARD_MAP_NO_CHECK = {
+    ("check_vma" if "check_vma" in _inspect.signature(_shard_map).parameters
+     else "check_rep"): False}
+
+
+def shard_axis_name(mesh) -> str:
+    """The mesh axis the PSI/CSS batch paths shard over: ``data`` when the
+    mesh has one, else the mesh's first axis (1-D sweep meshes)."""
+    names = tuple(mesh.axis_names)
+    return "data" if "data" in names else names[0]
+
+
+def batch_shard_map(fn, mesh, axis: str):
+    """shard_map ``fn`` (batched over every arg/out's LEADING dim) so the
+    batch splits over one mesh axis — the leading dim must be a multiple
+    of the axis size (see ``pad_batch_rows``).  Per-row compute is
+    untouched: each device runs the identical per-row program on its
+    rows, which is what keeps sharded results byte-identical to the
+    single-device path (DESIGN.md §5)."""
+    spec = P(axis)
+    return _shard_map(fn, mesh=mesh, in_specs=spec, out_specs=spec,
+                      **_SHARD_MAP_NO_CHECK)
+
+
+def padded_rows(b: int, n_shards: int) -> int:
+    """The leading-dim size ``pad_batch_rows`` pads a B-row batch to."""
+    return b + (-b) % n_shards
+
+
+def pad_batch_rows(arrays, n_shards: int):
+    """Pad every array's leading dim (shared batch size B) to
+    ``padded_rows(B, n_shards)`` by repeating row 0.  Returns
+    (padded, B): callers truncate outputs back to B rows.  Row-0 filler
+    keeps the padded rows shape- and dtype-representative so the
+    per-row program is identical across shards (outputs for filler rows
+    are discarded)."""
+    import numpy as _np
+    b = arrays[0].shape[0]
+    pad = padded_rows(b, n_shards) - b
+    if pad == 0:
+        return list(arrays), b
+    out = []
+    for a in arrays:
+        filler = _np.repeat(_np.asarray(a[:1]), pad, axis=0)
+        out.append(_np.concatenate([_np.asarray(a), filler], axis=0))
+    return out, b
+
+
+def resolve_batch_mesh(mesh, shard_axis: Optional[str] = None):
+    """(mesh, axis, n_shards) for the batch-sharding paths; ``mesh=None``
+    or a 1-sized axis collapses to (None, None, 1) — the plain
+    single-device dispatch path.  One definition so PSI and CSS always
+    shard over the same axis of a shared mesh.  An explicit
+    ``shard_axis`` that the mesh doesn't have raises rather than
+    silently running unsharded."""
+    if mesh is None:
+        return None, None, 1
+    if shard_axis is not None and shard_axis not in tuple(mesh.axis_names):
+        raise ValueError(f"shard_axis {shard_axis!r} not in mesh axes "
+                         f"{tuple(mesh.axis_names)}")
+    axis = shard_axis or shard_axis_name(mesh)
+    n = mesh_axis_size(mesh, axis)
+    if n <= 1:
+        return None, None, 1
+    return mesh, axis, n
+
+
 def mesh_axis_size(mesh, name: str) -> int:
     try:
         return dict(zip(mesh.axis_names, mesh.axis_sizes

@@ -79,6 +79,64 @@ def test_he_exchange_fidelity():
     assert res.comm_bytes > 120 * 2 * 24   # ciphertexts ≫ plaintext tuples
 
 
+# --------------------------------------------------- ragged client batching
+
+def test_ragged_clients_batch_and_match_sequential():
+    """Unequal feature widths (11 features / 3 clients -> 4,4,3) now run
+    the pad-and-mask batched path; selection must equal the sequential
+    per-client loop (zero-padded columns are exact — see kmeans_fit)."""
+    from repro.core.coreset import clients_batchable
+
+    part = make_cls_partition(n=320, d=11, clients=3, seed=6)
+    shapes = {f.shape for f in part.client_features}
+    assert len(shapes) > 1                      # genuinely ragged
+    assert clients_batchable(part.client_features, clusters=5)
+    batched = cluster_coreset(part, 5, seed=3)
+    seq = cluster_coreset(part, 5, seed=3, batch_clients="never")
+    assert batched.batched and not seq.batched
+    assert np.array_equal(batched.indices, seq.indices)
+    assert np.array_equal(batched.weights, seq.weights)
+    for b, s in zip(batched.local, seq.local):
+        assert np.array_equal(b.assign, s.assign)
+        assert np.array_equal(b.sq_dist, s.sq_dist)
+        assert np.array_equal(b.weight, s.weight)
+        assert b.centroids.shape == s.centroids.shape
+
+
+def test_ragged_rows_batch_via_mask():
+    """Clients with unequal SAMPLE counts (direct feature-list API) pad
+    rows and mask them out of init sampling, counts, and the reseed
+    argmax — per-client results match the sequential fits."""
+    from repro.core.coreset import _batched_local_clusterings
+
+    rng = np.random.default_rng(9)
+    feats = [rng.normal(size=(n, d)).astype(np.float32)
+             for n, d in [(120, 3), (87, 5), (140, 2)]]
+    local, _, shards = _batched_local_clusterings(
+        feats, 4, seed=2, iters=10, impl="ref")
+    assert shards == 1
+    for m, f in enumerate(feats):
+        seq = local_cluster_weights(f, 4, seed=2 + 17 * m, iters=10)
+        assert np.array_equal(local[m].assign, seq.assign)
+        assert local[m].sq_dist.shape == seq.sq_dist.shape
+        # row-padding changes XLA's gemm shape, so sq_dist may differ by
+        # reassociation ulps; the clustering itself must be identical
+        np.testing.assert_allclose(local[m].sq_dist, seq.sq_dist,
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(local[m].centroids, seq.centroids,
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_ragged_small_client_falls_back_to_sequential():
+    """A client with fewer samples than the cluster count needs its own
+    smaller k, which the static-k batched path cannot express."""
+    from repro.core.coreset import clients_batchable
+
+    feats = [np.zeros((40, 3), np.float32), np.zeros((4, 2), np.float32)]
+    assert not clients_batchable(feats, clusters=8)
+    assert clients_batchable(feats, clusters=4)
+
+
 @settings(max_examples=10, deadline=None)
 @given(st.integers(60, 200), st.integers(2, 8), st.integers(0, 50))
 def test_property_selection_is_deterministic_partition(n, k, seed):

@@ -95,6 +95,37 @@ def test_tag_words_is_62_bit():
     assert engine.tag_words(12345) == 12345
 
 
+def test_default_sort_keys_off_platform(monkeypatch):
+    """The sort-mode default follows the ACTUAL backend, not the Pallas
+    interpreter flag: real CPU gets numpy's radix-class sort (XLA's CPU
+    multi-operand sort is ~30× slower), accelerators get lax.sort."""
+    import jax
+
+    monkeypatch.setattr(jax, "default_backend", lambda: "cpu")
+    assert engine._default_sort(None) == "host"
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    assert engine._default_sort(None) == "device"
+    monkeypatch.setattr(jax, "default_backend", lambda: "gpu")
+    assert engine._default_sort(None) == "device"
+    # an explicit mode always wins
+    assert engine._default_sort("host") == "host"
+    assert engine._default_sort("device") == "device"
+
+
+def test_default_sort_independent_of_interpret_flag(monkeypatch):
+    """Regression: the default used to key off REPRO_PALLAS_INTERPRET,
+    so a real (non-interpret) CPU run silently got the slow lax.sort
+    path."""
+    import jax
+
+    from repro.kernels import padding
+
+    monkeypatch.setattr(jax, "default_backend", lambda: "cpu")
+    for interpret in (True, False):
+        monkeypatch.setattr(padding, "INTERPRET", interpret)
+        assert engine._default_sort(None) == "host"
+
+
 @settings(max_examples=10, deadline=None)
 @given(st.sets(st.integers(0, 5000), max_size=50),
        st.sets(st.integers(0, 5000), max_size=50),

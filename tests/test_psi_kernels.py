@@ -163,3 +163,81 @@ def test_property_intersect_set_semantics(sa, sb):
     expect = np.asarray(sorted(sa & sb), np.int64)
     got = _intersect_via(a, b, "pallas")
     assert np.array_equal(got, expect)
+
+
+# ------------------------------------------------------ tiled multi-pass merge
+
+def _padded_lanes(tags64, origin, pad, p):
+    key = (np.sort(tags64).astype(np.uint64) << np.uint64(1)) | np.uint64(
+        origin)
+    kh = np.full((p,), pad[0], np.uint32)
+    kl = np.full((p,), pad[1], np.uint32)
+    kh[:len(key)] = (key >> np.uint64(32)).astype(np.uint32)
+    kl[:len(key)] = (key & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    return jnp.asarray(kh), jnp.asarray(kl)
+
+
+@pytest.mark.parametrize("na,nb,chunk_p,tile", [
+    (100, 80, 16, 8),      # several cross passes + tiny chunks
+    (1000, 900, 64, 16),   # deeper cross/tile split
+    (5, 3, 8, 8),          # chunk covers everything: zero cross passes
+    (300, 300, 256, 64),   # one cross pass, tile < chunk
+])
+def test_tiled_merge_bitwise_matches_ref(na, nb, chunk_p, tile):
+    """The multi-pass grid schedule runs the identical compare-exchange
+    network, so its four outputs are bitwise equal to the jnp ref at ANY
+    chunk/tile split (shrunk here so small inputs exercise several cross
+    passes)."""
+    from repro.kernels.sorted_intersect.kernel import sorted_intersect_tiled
+    rng = np.random.default_rng(na + nb)
+    a = np.unique(rng.integers(0, 2**60, na, dtype=np.int64))
+    b = np.unique(rng.integers(0, 2**60, max(nb, 1), dtype=np.int64))[:nb]
+    k = min(len(a), len(b)) // 2
+    if k:
+        b = np.unique(np.concatenate([a[:k], b]))
+    p = next_pow2(max(len(a), len(b)))
+    a_kh, a_kl = _padded_lanes(a, 1, PAD_A, p)
+    b_kh, b_kl = _padded_lanes(b, 0, PAD_B, p)
+    out_t = sorted_intersect_tiled(a_kh, a_kl, b_kh, b_kl,
+                                   interpret=True, chunk_p=chunk_p,
+                                   tile=tile)
+    out_r = si_ref.sorted_intersect(a_kh, a_kl, b_kh, b_kl)
+    for t, r in zip(out_t, out_r):
+        assert np.array_equal(np.asarray(t), np.asarray(r))
+
+
+@pytest.mark.slow
+def test_ops_dispatches_tiled_past_vmem_bound():
+    """P > 2^19 must run the tiled kernel (no jnp-ref fallback) and
+    still match the ref bitwise — the acceptance bar for retiring the
+    fallback."""
+    from unittest import mock
+
+    from repro.kernels.sorted_intersect import kernel as si_kernel
+    from repro.kernels.sorted_intersect import ops as si_ops
+
+    n = 600_000                      # next_pow2 -> 2^20 > PALLAS_MAX_P
+    rng = np.random.default_rng(0)
+    universe = rng.choice(4 * n, size=2 * n, replace=False).astype(np.int64)
+    a = np.sort(universe[:n])
+    b = np.sort(universe[n // 2: n // 2 + n])
+    p = next_pow2(n)
+    assert p > si_kernel.PALLAS_MAX_P
+    a_kh, a_kl = _padded_lanes(a, 1, PAD_A, p)
+    b_kh, b_kl = _padded_lanes(b, 0, PAD_B, p)
+    with mock.patch.object(si_kernel, "sorted_intersect_pallas",
+                           side_effect=AssertionError(
+                               "single-block kernel past its VMEM bound")), \
+         mock.patch.object(si_ops, "sorted_intersect_pallas",
+                           side_effect=AssertionError(
+                               "single-block kernel past its VMEM bound")):
+        out_t = si_ops.sorted_intersect.__wrapped__(
+            a_kh, a_kl, b_kh, b_kl, impl="pallas")
+    out_r = si_ref.sorted_intersect(a_kh, a_kl, b_kh, b_kl)
+    for t, r in zip(out_t, out_r):
+        assert np.array_equal(np.asarray(t), np.asarray(r))
+    # and the decoded intersection is the numpy set intersection
+    sel = np.asarray(out_t[0]).astype(bool)
+    rank = np.asarray(out_t[1])
+    got = np.sort(np.sort(a)[rank[sel] - 1])
+    assert np.array_equal(got, np.intersect1d(a, b))

@@ -1,0 +1,180 @@
+"""shard_map parity: the sharded PSI / coreset paths must be
+byte-identical to the single-device paths.
+
+These tests exercise real multi-device shard_map, so they skip unless
+the process sees >= 2 devices — CI provides them via
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (a dedicated
+tier-1 job variant); run locally the same way.
+"""
+import jax
+import numpy as np
+import pytest
+
+from conftest import make_cls_partition
+from repro.core.coreset import cluster_coreset
+from repro.core.mpsi import MPSI
+from repro.core.treecss import run_pipeline
+from repro.core.splitnn import SplitNNConfig
+from repro.data.synthetic import make_id_universe
+from repro.launch.mesh import make_data_mesh
+from repro.psi import engine
+
+needs_devices = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs >=2 devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_data_mesh()
+
+
+def _pair_batch(npairs, base_n, seed):
+    rng = np.random.default_rng(seed)
+    senders, receivers, seeds = [], [], []
+    for i in range(npairs):
+        a = np.unique(rng.integers(0, 2**55, base_n + 211 * i,
+                                   dtype=np.int64))
+        b = np.unique(rng.integers(0, 2**55, base_n, dtype=np.int64))
+        b = np.unique(np.concatenate([a[:base_n // 3], b]))
+        senders.append(a)
+        receivers.append(b)
+        seeds.append((int(rng.integers(0, 2**32)),
+                      int(rng.integers(0, 2**32))))
+    return senders, receivers, seeds
+
+
+# ------------------------------------------------------------- PSI engine
+
+@needs_devices
+@pytest.mark.parametrize("sort", ["host", "device"])
+@pytest.mark.parametrize("npairs", [5, 8])   # non-divisible + divisible
+def test_oprf_round_sharded_byte_identical(mesh, sort, npairs):
+    senders, receivers, seeds = _pair_batch(npairs, 1500, seed=npairs)
+    base = engine.oprf_round(senders, receivers, seeds, impl="pallas",
+                             sort=sort)
+    shrd = engine.oprf_round(senders, receivers, seeds, impl="pallas",
+                             sort=sort, mesh=mesh)
+    assert shrd.shards == len(jax.devices())
+    assert base.shards == 1
+    assert len(shrd.intersections) == npairs
+    for got, exp in zip(shrd.intersections, base.intersections):
+        assert got.dtype == exp.dtype
+        assert np.array_equal(got, exp)
+
+
+@needs_devices
+def test_match_round_sharded_byte_identical(mesh):
+    senders, receivers, _ = _pair_batch(3, 900, seed=17)
+    r_tags = [ids & engine.TAG_MASK for ids in receivers]
+    s_tags = [ids & engine.TAG_MASK for ids in senders]
+    base = engine.match_round(r_tags, receivers, s_tags, impl="pallas")
+    shrd = engine.match_round(r_tags, receivers, s_tags, impl="pallas",
+                              mesh=mesh)
+    assert shrd.shards == len(jax.devices())
+    for got, exp in zip(shrd.intersections, base.intersections):
+        assert np.array_equal(got, exp)
+
+
+@needs_devices
+@pytest.mark.parametrize("protocol", ["rsa", "oprf"])
+def test_tree_mpsi_sharded_matches_single_device(mesh, protocol):
+    """Full Tree-MPSI on the device backend: intersection AND the
+    modeled cost accounting must not change when rounds shard."""
+    sets, core = make_id_universe(10, 600, 0.7, seed=23)
+    base = MPSI["tree"](sets, protocol=protocol, backend="device",
+                        use_he=False)
+    shrd = MPSI["tree"](sets, protocol=protocol, backend="device",
+                        use_he=False, mesh=mesh)
+    assert np.array_equal(shrd.intersection, base.intersection)
+    assert np.array_equal(shrd.intersection, core)
+    assert shrd.total_bytes == base.total_bytes
+    assert shrd.total_messages == base.total_messages
+    assert shrd.rounds == base.rounds
+    assert shrd.device_dispatches == base.device_dispatches
+
+
+# ---------------------------------------------------------------- coreset
+
+@needs_devices
+def test_coreset_sharded_byte_identical(mesh):
+    """Same-shape clients: the client batch shards over the mesh axis;
+    indices and weights must be byte-identical."""
+    part = make_cls_partition(n=420, d=12, clients=3, seed=4)
+    base = cluster_coreset(part, 6, seed=1)
+    shrd = cluster_coreset(part, 6, seed=1, mesh=mesh)
+    assert base.batched and shrd.batched
+    assert shrd.shards == len(jax.devices())
+    assert np.array_equal(shrd.indices, base.indices)
+    assert np.array_equal(shrd.weights, base.weights)   # f32 bit-equal
+    for b, s in zip(base.local, shrd.local):
+        assert np.array_equal(b.assign, s.assign)
+        assert np.array_equal(b.sq_dist, s.sq_dist)
+        assert np.array_equal(b.centroids, s.centroids)
+
+
+@needs_devices
+def test_coreset_sharded_ragged_byte_identical(mesh):
+    """Ragged widths (11 features / 3 clients) through pad-and-mask AND
+    the mesh shard at once."""
+    part = make_cls_partition(n=330, d=11, clients=3, seed=8)
+    assert len({f.shape for f in part.client_features}) > 1
+    base = cluster_coreset(part, 5, seed=2)
+    shrd = cluster_coreset(part, 5, seed=2, mesh=mesh)
+    assert base.batched and shrd.batched
+    assert np.array_equal(shrd.indices, base.indices)
+    assert np.array_equal(shrd.weights, base.weights)
+
+
+# ------------------------------------------------------------- end to end
+
+@needs_devices
+def test_pipeline_mesh_knob_end_to_end(mesh):
+    """run_pipeline(mesh=...) shards alignment (device PSI) and CSS;
+    aligned set, coreset selection, and modeled costs match the
+    single-device run byte-for-byte."""
+    full = make_cls_partition(n=700, d=12, seed=0)
+    rows = np.random.default_rng(1).permutation(700)
+    tr, te = full.take(rows[:520]), full.take(rows[520:])
+    cfg = SplitNNConfig(model="knn", n_classes=2)
+    base = run_pipeline(tr, te, cfg, variant="treecss",
+                        clusters_per_client=4, seed=0,
+                        psi_backend="device")
+    shrd = run_pipeline(tr, te, cfg, variant="treecss",
+                        clusters_per_client=4, seed=0,
+                        psi_backend="device", mesh=mesh)
+    assert np.array_equal(shrd.mpsi.intersection, base.mpsi.intersection)
+    assert shrd.mpsi.total_bytes == base.mpsi.total_bytes
+    assert shrd.n_train == base.n_train
+    assert np.array_equal(shrd.coreset.indices, base.coreset.indices)
+    assert np.array_equal(shrd.coreset.weights, base.coreset.weights)
+    assert shrd.coreset.shards == len(jax.devices())
+    assert shrd.metric == base.metric
+
+
+def test_unknown_shard_axis_raises():
+    """A typo'd shard_axis must raise, not silently run unsharded."""
+    from repro.sharding import resolve_batch_mesh
+
+    mesh1 = make_data_mesh(1)
+    with pytest.raises(ValueError, match="shard_axis"):
+        resolve_batch_mesh(mesh1, "dat")
+    part = make_cls_partition(n=120, d=9, clients=3, seed=0)
+    with pytest.raises(ValueError, match="shard_axis"):
+        cluster_coreset(part, 4, seed=0, mesh=mesh1, shard_axis="model")
+
+
+def test_single_device_mesh_is_a_noop():
+    """A 1-device mesh must take the plain dispatch path (shards == 1),
+    so the knob is safe to leave on everywhere."""
+    mesh1 = make_data_mesh(1)
+    senders, receivers, seeds = _pair_batch(3, 400, seed=2)
+    rnd = engine.oprf_round(senders, receivers, seeds, impl="pallas",
+                            mesh=mesh1)
+    assert rnd.shards == 1
+    part = make_cls_partition(n=200, d=9, clients=3, seed=1)
+    res = cluster_coreset(part, 4, seed=0, mesh=mesh1)
+    assert res.shards == 1
+    base = cluster_coreset(part, 4, seed=0)
+    assert np.array_equal(res.indices, base.indices)

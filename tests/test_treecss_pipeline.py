@@ -81,6 +81,35 @@ def test_pipeline_reports_stage_times(parts):
         rep.align_seconds + rep.coreset_seconds + rep.train_seconds)
 
 
+def test_align_selects_intersected_rows_not_prefix():
+    """Regression: _align used to map the intersection to
+    np.arange(len(inter)) — a row PREFIX — but make_id_universe shuffles
+    each client's id list, so the core ids land on scattered rows.  The
+    aligned partition must contain exactly the rows whose ids the MPSI
+    intersection returned."""
+    from repro.core.treecss import _align
+    from repro.data.synthetic import make_id_universe
+
+    part = make_cls_partition(n=300, d=9, seed=5)
+    seed = 5
+    aligned, stats, _, _ = _align(part, "tree", overlap=0.7,
+                                  protocol="rsa", seed=seed)
+    # reconstruct the row <-> id map _align used (same deterministic seed)
+    sets, core = make_id_universe(part.n_clients, part.n_samples, 0.7,
+                                  seed=seed)
+    row_ids = np.asarray(sets[0], np.int64)
+    expect_rows = np.sort(np.nonzero(np.isin(row_ids,
+                                             stats.intersection))[0])
+    assert np.array_equal(stats.intersection, core)
+    # the shuffled core must NOT be a prefix (else the test is vacuous)
+    assert not np.array_equal(expect_rows, np.arange(len(expect_rows)))
+    expect = part.take(expect_rows)
+    assert aligned.n_samples == len(stats.intersection)
+    assert np.array_equal(aligned.labels, expect.labels)
+    for got_f, exp_f in zip(aligned.client_features, expect.client_features):
+        assert np.array_equal(got_f, exp_f)
+
+
 def test_pipeline_device_psi_backend(parts):
     """End-to-end with the device alignment engine: identical aligned
     set (so identical training data size) and a measured wall time."""

@@ -1,0 +1,77 @@
+"""V-coreset baseline: leverage-score sampler invariants, incl. the
+rank-deficient case that used to raise under replace=False sampling."""
+import numpy as np
+import pytest
+
+from conftest import make_cls_partition
+from repro.core.vcoreset import leverage_scores, vcoreset
+from repro.data.vertical import VerticalPartition
+
+
+def test_vcoreset_basic_invariants():
+    part = make_cls_partition(n=400, d=12, clients=3, seed=0)
+    idx, w = vcoreset(part, 80, seed=0)
+    assert len(idx) == len(np.unique(idx))          # deduped
+    assert len(idx) <= 80                           # multiset may collapse
+    assert (idx[:-1] < idx[1:]).all()               # sorted
+    assert idx.min() >= 0 and idx.max() < part.n_samples
+    assert np.all(np.isfinite(w)) and np.all(w > 0)
+    assert np.mean(w) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_vcoreset_rank_deficient_features():
+    """Fewer nonzero leverage scores than the requested size: with
+    replace=False this raised ValueError; with-replacement sampling must
+    succeed and only ever draw rows with nonzero probability."""
+    n = 200
+    rng = np.random.default_rng(3)
+    # 192 all-zero rows + 4 (v, -v) pairs: column means are exactly 0,
+    # so centering leaves the zero rows zero -> their SVD rows (and
+    # leverage) are exactly 0; constant labels contribute nothing
+    v = rng.normal(size=(4, 4)).astype(np.float64)
+    base = np.zeros((n, 4), np.float64)
+    base[:4] = v
+    base[4:8] = -v
+    labels = np.zeros(n, np.int64)
+    part = VerticalPartition([base.copy(), base.copy()], labels,
+                             [slice(0, 4), slice(4, 8)])
+    lev = leverage_scores(part)
+    assert (lev > 1e-12).sum() < 50                 # genuinely degenerate
+    idx, w = vcoreset(part, 50, seed=1)
+    assert len(idx) >= 1
+    assert np.all(np.isfinite(w)) and np.all(w > 0)
+    # every sampled row had nonzero probability
+    assert np.all(lev[idx] > 0)
+
+
+def test_vcoreset_all_zero_leverage_falls_back_to_uniform():
+    """Fully constant data (zero leverage everywhere) must not divide by
+    zero — the sampler falls back to uniform probabilities."""
+    n = 60
+    part = VerticalPartition(
+        [np.ones((n, 3), np.float32), np.ones((n, 2), np.float32)],
+        np.zeros(n, np.int64), [slice(0, 3), slice(3, 5)])
+    idx, w = vcoreset(part, 20, seed=0)
+    assert len(idx) >= 1
+    assert np.all(np.isfinite(w)) and np.all(w > 0)
+
+
+def test_vcoreset_duplicate_draws_accumulate_weight():
+    """A row drawn c times carries c/(T·p) mass: force duplicates by
+    concentrating all probability on very few rows."""
+    n = 100
+    rng = np.random.default_rng(5)
+    x = np.zeros((n, 3), np.float32)
+    x[:2] = rng.normal(0, 50.0, size=(2, 3)).astype(np.float32)
+    part = VerticalPartition([x], np.zeros(n, np.int64), [slice(0, 3)])
+    idx, w = vcoreset(part, 30, seed=2)
+    assert len(idx) < 30                            # duplicates collapsed
+    assert np.all(w > 0)
+
+
+def test_vcoreset_deterministic():
+    part = make_cls_partition(n=150, d=8, clients=2, seed=7)
+    i1, w1 = vcoreset(part, 40, seed=9)
+    i2, w2 = vcoreset(part, 40, seed=9)
+    assert np.array_equal(i1, i2)
+    assert np.array_equal(w1, w2)
