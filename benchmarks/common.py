@@ -40,11 +40,12 @@ def emit(rows: List[Dict], name: str, keys: Optional[Sequence[str]] = None
 
 
 def dataset_partitions(name: str, *, n_clients: int = 3, seed: int = 0,
-                       quick: bool = True):
+                       quick: bool = True, n_override: Optional[int] = None):
     """Paper protocol: 70/30 train/test split, features equally over 3
-    clients, labels at the label owner."""
+    clients, labels at the label owner.  ``n_override`` forces the
+    instance count (CI smoke runs)."""
     spec = DATASETS[name]
-    n = QUICK_N[name] if quick else spec.n_instances
+    n = n_override or (QUICK_N[name] if quick else spec.n_instances)
     x, y = make_dataset(spec, seed=seed, n_override=n)
     rng = np.random.default_rng(seed + 1)
     order = rng.permutation(n)

@@ -12,7 +12,8 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (hours); default quick sizes")
     ap.add_argument("--only", default="",
-                    help="comma-list: fig7,table2,fig45,fig6,roofline")
+                    help="comma-list: fig7,table2,table2e2e,fig45,fig6,"
+                         "roofline")
     args = ap.parse_args()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
@@ -22,6 +23,7 @@ def main() -> None:
     jobs = [
         ("fig7", fig7_mpsi.run),          # Fig 7 a/b/c: MPSI comparison
         ("table2", table2_framework.run),  # Table 2: framework end-to-end
+        ("table2e2e", table2_framework.run_e2e),  # Table 2: stage timings
         ("fig45", fig45_ablation.run),     # Figs 4&5: clusters + weighting
         ("fig6", fig6_coreset.run),        # Fig 6: vs V-coreset
         ("beyond", beyond_minibatch.run),  # beyond-paper: minibatch CSS

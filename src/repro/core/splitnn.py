@@ -1,4 +1,5 @@
-"""SplitNN VFL runtime (paper §3) with instance-wise communication accounting.
+"""SplitNN VFL model zoo (paper §3) with instance-wise communication
+accounting.
 
 Roles: M clients (bottom models f_b^m over local feature slices), an
 aggregation server (top model f_t), and the label owner (loss). Per step:
@@ -9,11 +10,15 @@ aggregation server (top model f_t), and the label owner (loss). Per step:
 
 Mathematically this is one partitioned forward/backward, so on-device we
 jit a single function; the VFL structure shows up as (a) the feature-block-
-diagonal bottom layer and (b) the counted activation/gradient bytes per
-sample per step — the "instance-wise communication" whose reduction by
-coreset training the paper measures. On a TPU mesh the client axis maps
-onto the ``model`` mesh axis (DESIGN.md §3): bottoms compute locally,
-"send to server" lowers to an all-gather of the activation blocks.
+diagonal bottom layer — fused into one slab pass by
+``kernels/splitnn_bottom`` — and (b) the counted activation/gradient bytes
+per sample per step, the "instance-wise communication" whose reduction by
+coreset training the paper measures.
+
+Training itself lives in ``repro.train.vfl`` (DESIGN.md §7): a scan-based
+epoch engine (one dispatch + one host sync per epoch, mesh-shardable) and
+the legacy per-step loop kept as its parity oracle.  ``train_splitnn``
+here is the thin stage entry point the pipeline calls.
 
 Models: LR / MLP (classification), LinearReg (regression) as SplitNN;
 KNN as distributed distance aggregation (squared L2 decomposes per client).
@@ -21,19 +26,24 @@ KNN as distributed distance aggregation (squared L2 decomposes per client).
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+import functools
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.he import PublicKey
 from repro.data.vertical import VerticalPartition
 from repro.train.losses import weighted_mse, weighted_softmax_xent
-from repro.train.optimizer import adam_init, adam_update
+from repro.train.vfl import EngineStats, TrainReport  # re-export (compat)
 
 ACT_BYTES = 4  # f32 activation/gradient element on the wire
+
+__all__ = [
+    "ACT_BYTES", "SplitNNConfig", "TrainReport", "EngineStats",
+    "init_splitnn", "splitnn_forward", "activation_bytes_per_sample",
+    "train_splitnn", "predict", "evaluate", "knn_predict",
+]
 
 
 # ------------------------------------------------------------------ configs
@@ -96,7 +106,11 @@ def init_splitnn(cfg: SplitNNConfig, feature_dims: Sequence[int]):
 
 
 def splitnn_forward(params, cfg: SplitNNConfig, xs: Sequence[jnp.ndarray]):
-    """xs: per-client feature slices [(B, d_m)]. Returns logits/preds (B, o)."""
+    """xs: per-client feature slices [(B, d_m)]. Returns logits/preds (B, o).
+
+    Per-client loop form — the slab form (one fused block-diagonal pass
+    over all M clients) is ``repro.train.vfl.forward_slab``.
+    """
     acts = []
     for bp, x in zip(params["bottoms"], xs):
         a = x @ bp["w"]
@@ -111,14 +125,18 @@ def splitnn_forward(params, cfg: SplitNNConfig, xs: Sequence[jnp.ndarray]):
     return h @ params["top"]["w2"] + params["top"]["b2"]
 
 
-def _loss_fn(params, cfg: SplitNNConfig, xs, y, w):
-    out = splitnn_forward(params, cfg, xs)
+def _loss_from_out(out, cfg: SplitNNConfig, y, w):
+    """Eq.(2) weighted loss from model output (shared by both engines)."""
     if cfg.n_classes == 0:
         return weighted_mse(out[:, 0:1], y[:, None], w)
     if cfg.n_classes == 2 and out.shape[-1] == 1:
         from repro.train.losses import weighted_binary_xent
         return weighted_binary_xent(out[:, 0], y, w)
     return weighted_softmax_xent(out, y, w)
+
+
+def _loss_fn(params, cfg: SplitNNConfig, xs, y, w):
+    return _loss_from_out(splitnn_forward(params, cfg, xs), cfg, y, w)
 
 
 def activation_bytes_per_sample(cfg: SplitNNConfig, m_clients: int) -> int:
@@ -132,78 +150,40 @@ def activation_bytes_per_sample(cfg: SplitNNConfig, m_clients: int) -> int:
 
 # ------------------------------------------------------------------ training
 
-@dataclasses.dataclass
-class TrainReport:
-    losses: List[float]
-    epochs: int
-    steps: int
-    train_seconds: float          # measured compute
-    comm_bytes: int               # instance-wise activation/grad traffic
-    simulated_comm_seconds: float
-    params: Any
-
-
 def train_splitnn(partition: VerticalPartition, cfg: SplitNNConfig, *,
                   sample_weights: Optional[np.ndarray] = None,
                   bandwidth: float = 10e9 / 8, latency: float = 2e-4,
-                  eval_partition: Optional[VerticalPartition] = None,
-                  verbose: bool = False) -> TrainReport:
-    """Mini-batch Adam training to the paper's convergence criterion."""
-    n = partition.n_samples
-    feature_dims = [f.shape[1] for f in partition.client_features]
-    params = init_splitnn(cfg, feature_dims)
-    opt = adam_init(params)
-    m = partition.n_clients
+                  verbose: bool = False, engine: str = "scan",
+                  mesh=None, shard_axis: Optional[str] = None,
+                  bottom_impl: str = "ref",
+                  block_b: int = 512) -> TrainReport:
+    """Mini-batch Adam training to the paper's convergence criterion.
 
-    y_np = partition.labels
-    if cfg.n_classes == 0:
-        y_all = jnp.asarray(y_np, jnp.float32)
-    else:
-        y_all = jnp.asarray(y_np, jnp.int32)
-    xs_all = [jnp.asarray(f, jnp.float32) for f in partition.client_features]
-    w_all = (jnp.asarray(sample_weights, jnp.float32)
-             if sample_weights is not None else None)
+    Thin stage entry point over ``repro.train.vfl``:
 
-    @jax.jit
-    def step(params, opt, idx):
-        xs = [x[idx] for x in xs_all]
-        y = y_all[idx]
-        w = w_all[idx] if w_all is not None else None
-        loss, grads = jax.value_and_grad(
-            lambda p: _loss_fn(p, cfg, xs, y, w))(params)
-        params, opt = adam_update(params, grads, opt, lr=cfg.lr)
-        return params, opt, loss
+    - ``engine="scan"`` (default): compiled epoch engine — one dispatch
+      and one host sync per epoch, remainder batches pad-and-masked,
+      ``mesh=``/``shard_axis=`` shard the per-step batch axis, and
+      ``bottom_impl`` selects the block-diagonal bottom layer
+      ("ref" slab oracle / "pallas" fused kernel / "loop" per-client).
+    - ``engine="loop"``: the legacy per-minibatch host loop (parity
+      oracle and dispatch-overhead baseline; single-device only).
+    """
+    from repro.train import vfl
 
-    rng = np.random.default_rng(cfg.seed)
-    bs = min(cfg.batch_size, n)
-    per_sample = activation_bytes_per_sample(cfg, m)
-    losses: List[float] = []
-    comm_bytes = 0
-    steps = 0
-    t0 = time.perf_counter()
-    epoch = 0
-    for epoch in range(1, cfg.max_epochs + 1):
-        order = rng.permutation(n)
-        ep_loss, nb = 0.0, 0
-        for s in range(0, n - bs + 1, bs):
-            idx = jnp.asarray(order[s:s + bs])
-            params, opt, loss = step(params, opt, idx)
-            ep_loss += float(loss)
-            nb += 1
-            steps += 1
-            comm_bytes += per_sample * bs
-        losses.append(ep_loss / max(nb, 1))
-        if verbose and epoch % 10 == 0:
-            print(f"  epoch {epoch}: loss {losses[-1]:.5f}")
-        wlen = cfg.convergence_window
-        if len(losses) > wlen:
-            if abs(losses[-1 - wlen] - losses[-1]) < cfg.convergence_eps:
-                break
-    train_seconds = time.perf_counter() - t0
-    sim_comm = comm_bytes / bandwidth + latency * 2 * steps * m
-    return TrainReport(losses=losses, epochs=epoch, steps=steps,
-                       train_seconds=train_seconds, comm_bytes=comm_bytes,
-                       simulated_comm_seconds=sim_comm, params=params)
+    if engine == "loop":
+        if mesh is not None:
+            raise ValueError("engine='loop' does not shard; use the scan "
+                             "engine for mesh training")
+        return vfl.train_loop(partition, cfg, sample_weights=sample_weights,
+                              bandwidth=bandwidth, latency=latency,
+                              verbose=verbose)
+    if engine != "scan":
+        raise ValueError(engine)
+    return vfl.train_scan(partition, cfg, sample_weights=sample_weights,
+                          bandwidth=bandwidth, latency=latency, mesh=mesh,
+                          shard_axis=shard_axis, bottom_impl=bottom_impl,
+                          block_b=block_b, verbose=verbose)
 
 
 # ---------------------------------------------------------------- evaluation
@@ -230,12 +210,30 @@ def evaluate(params, cfg: SplitNNConfig, partition: VerticalPartition
 
 # --------------------------------------------------------------- VFL k-NN
 
+@functools.partial(jax.jit, static_argnames=("kk",))
+def _knn_neighbors(test_feats, train_feats, train_sq, kk: int):
+    """Top-k nearest training rows for one test batch, on device.
+
+    ‖x−z‖² = Σ_m ‖x^m−z^m‖² decomposes per client, so every client
+    contributes its local partial Gram/norm terms; the per-client
+    accumulation is a sum of M batched GEMMs (f32, device) instead of
+    the historical pure-numpy double loop.
+    """
+    a_sq = sum(jnp.sum(a * a, axis=1) for a in test_feats)        # (B,)
+    cross = sum(a @ b.T for a, b in zip(test_feats, train_feats))  # (B,Ntr)
+    d = a_sq[:, None] - 2.0 * cross + train_sq[None]
+    _, nn = jax.lax.top_k(-d, kk)
+    return nn
+
+
 def knn_predict(train_part: VerticalPartition, test_part: VerticalPartition,
                 k: int = 5, *, sample_weights: Optional[np.ndarray] = None,
                 batch: int = 512) -> np.ndarray:
-    """VFL k-NN: ‖x−z‖² = Σ_m ‖x^m−z^m‖², so every client contributes its
-    local partial distances and the label owner votes (optionally weighted
-    by the coreset weights)."""
+    """VFL k-NN: clients contribute local partial distances (on device),
+    the label owner votes — optionally weighted by the coreset weights —
+    via one vectorized scatter-add per batch (``np.add.at`` over the
+    (batch, k) neighbor grid; duplicate class indices accumulate in the
+    same j-ascending order as the per-neighbor loop it replaces)."""
     n_tr = train_part.n_samples
     n_te = test_part.n_samples
     preds = np.empty(n_te, np.int64)
@@ -243,19 +241,18 @@ def knn_predict(train_part: VerticalPartition, test_part: VerticalPartition,
          if sample_weights is not None else np.ones(n_tr))
     labels = train_part.labels.astype(np.int64)
     n_classes = int(labels.max()) + 1
+    kk = min(k, n_tr)
+    train_feats = [jnp.asarray(f, jnp.float32)
+                   for f in train_part.client_features]
+    train_sq = sum(jnp.sum(b * b, axis=1) for b in train_feats)
     for s in range(0, n_te, batch):
         e = min(s + batch, n_te)
-        d = np.zeros((e - s, n_tr), np.float64)
-        for f_tr, f_te in zip(train_part.client_features,
-                              test_part.client_features):
-            a = f_te[s:e].astype(np.float64)
-            b = f_tr.astype(np.float64)
-            d += (np.sum(a * a, 1)[:, None] - 2 * a @ b.T
-                  + np.sum(b * b, 1)[None])
-        kk = min(k, n_tr)
-        nn = np.argpartition(d, kk - 1, axis=1)[:, :kk]
+        test_feats = [jnp.asarray(f[s:e], jnp.float32)
+                      for f in test_part.client_features]
+        nn = np.asarray(_knn_neighbors(test_feats, train_feats, train_sq,
+                                       kk))
         votes = np.zeros((e - s, n_classes))
-        for j in range(kk):
-            votes[np.arange(e - s), labels[nn[:, j]]] += w[nn[:, j]]
+        rows = np.broadcast_to(np.arange(e - s)[:, None], nn.shape)
+        np.add.at(votes, (rows, labels[nn]), w[nn])
         preds[s:e] = votes.argmax(axis=1)
     return preds

@@ -96,11 +96,18 @@ def run_pipeline(train_part: VerticalPartition,
                  seed: int = 0,
                  knn_k: int = 5,
                  mesh=None,
-                 shard_axis: Optional[str] = None) -> PipelineReport:
-    """``mesh`` (with optional ``shard_axis``) shards both device-path
-    stages over one mesh axis: the PSI engine's per-round pair batch
-    (``psi_backend="device"``) and the CSS batched client fit — results
-    are byte-identical to the single-device run (DESIGN.md §5)."""
+                 shard_axis: Optional[str] = None,
+                 train_engine: str = "scan",
+                 bottom_impl: str = "ref") -> PipelineReport:
+    """``mesh`` (with optional ``shard_axis``) now shards ALL THREE
+    device-path stages over one mesh axis: the PSI engine's per-round
+    pair batch (``psi_backend="device"``), the CSS batched client fit,
+    and the SplitNN scan engine's per-step batch axis.  PSI/CSS results
+    are byte-identical to the single-device run; sharded training
+    matches within gemm/psum-reassociation ulps (DESIGN.md §5, §7).
+    ``train_engine``/``bottom_impl`` select the training engine and the
+    block-diagonal bottom implementation ("pallas" = the fused
+    VMEM-resident kernel on real TPU) — see ``train_splitnn``."""
     variant = variant.lower()
     topology = "tree" if variant.startswith("tree") else (
         "path" if variant.startswith("path") else "star")
@@ -147,7 +154,10 @@ def run_pipeline(train_part: VerticalPartition,
                                    train_seconds=train_secs, comm_bytes=0,
                                    simulated_comm_seconds=0.0, params=None)
     else:
-        train_report = train_splitnn(train_data, cfg, sample_weights=weights)
+        train_report = train_splitnn(train_data, cfg, sample_weights=weights,
+                                     mesh=mesh, shard_axis=shard_axis,
+                                     engine=train_engine,
+                                     bottom_impl=bottom_impl)
         train_secs = (train_report.train_seconds
                       + train_report.simulated_comm_seconds)
         metric = evaluate(train_report.params, cfg, test_part)

@@ -8,6 +8,9 @@
                     u64 id lanes as 2×u32 (OPRF tag evaluation)
   sorted_intersect— bitonic sort-merge intersection of two padded
                     sorted tag arrays (TPSI matching, DESIGN.md §6)
+  splitnn_bottom  — fused block-diagonal VFL bottom layer: all M
+                    clients' relu(x_m @ w_m + b_m) in one pass, weight
+                    blocks VMEM-resident across batch tiles (§7)
   flash_attention — online-softmax GQA attention (SplitNN LLM train/serve)
   ssd_scan        — Mamba2 SSD chunked scan with VMEM-carried state
 

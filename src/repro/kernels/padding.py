@@ -1,9 +1,12 @@
-"""Shared padding/layout contract for the k-means Pallas kernels.
+"""Shared padding/layout contract for the Pallas kernels.
 
-Both ``kmeans_assign`` and ``kmeans_update`` tile points over an N grid
-and keep all centroids resident: N pads to the block size, d and K pad
-to 128 (MXU lane alignment). One definition here so the contract — and
-the interpret-mode switch — cannot silently diverge between kernels.
+The k-means kernels (``kmeans_assign``, ``kmeans_update``) tile points
+over an N grid and keep all centroids resident: N pads to the block
+size, d and K pad to 128 (MXU lane alignment).  The ``splitnn_bottom``
+kernel tiles the batch over a B grid with each client's weight block
+resident: B pads to the block size, d and o pad to 128.  One definition
+here so the contracts — and the interpret-mode switch — cannot silently
+diverge between kernels.
 """
 from __future__ import annotations
 
@@ -39,3 +42,28 @@ def pad_points_centroids(points: jnp.ndarray, centroids: jnp.ndarray,
     c = jnp.zeros((kp, dp), jnp.float32).at[:k, :d].set(
         centroids.astype(jnp.float32))
     return p, c, bn
+
+
+def pad_bottom_blocks(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                      block_b: int
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, int]:
+    """Zero-pad the (M, B, d) batch slab / (M, d, o) client weight stack /
+    (M, o) biases to the ``splitnn_bottom`` kernel layout.
+
+    Returns (x (M, Bp, dp) f32, w (M, dp, op) f32, b (M, 1, op) f32, bb)
+    with Bp % bb == 0 and dp, op multiples of 128, where bb is block_b
+    shrunk to the padded B for small batches.  Zero padding is exact:
+    padded d columns multiply zero features, padded o columns read back
+    sliced off, padded B rows are discarded by the caller.
+    """
+    m, n, d = x.shape
+    o = w.shape[2]
+    bb = min(block_b, round_up(n, 8))
+    bp, dp, op = round_up(n, bb), round_up(d, 128), round_up(o, 128)
+    xp = jnp.zeros((m, bp, dp), jnp.float32).at[:, :n, :d].set(
+        x.astype(jnp.float32))
+    wp = jnp.zeros((m, dp, op), jnp.float32).at[:, :d, :o].set(
+        w.astype(jnp.float32))
+    bb_pad = jnp.zeros((m, 1, op), jnp.float32).at[:, 0, :o].set(
+        b.astype(jnp.float32))
+    return xp, wp, bb_pad, bb

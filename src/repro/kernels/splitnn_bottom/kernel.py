@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: fused block-diagonal SplitNN bottom layer.
+
+All M clients' bottom models are independent GEMMs over disjoint feature
+slices — a block-diagonal matmul.  The legacy forward ran them as an
+M-long Python loop of small ``x_m @ w_m`` dispatches; here the whole
+padded (M, B, d_max) slab runs in ONE pallas_call:
+
+  · grid (M, B/bb): step (m, i) loads client m's (bb, dp) batch tile and
+    its full (dp, op) weight block into VMEM,
+  · one MXU matmul per step, + bias + optional ReLU in VREGs,
+  · the weight block's index map ignores i, so the TPU's sequential grid
+    keeps w[m] resident in VMEM across all of client m's batch tiles
+    (revisiting) — each weight block is read from HBM once per call, not
+    once per tile.
+
+Padding contract (``padding.pad_bottom_blocks``, enforced by ops.py):
+Bp % bb == 0, dp % 128 == 0, op % 128 == 0; zero-padded d columns
+multiply zero features (exact), padded B rows / o columns are sliced off
+by the caller.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bottom_kernel(relu: bool, x_ref, w_ref, b_ref, out_ref):
+    x = x_ref[0]                              # (bb, dp) batch tile
+    w = w_ref[0]                              # (dp, op) resident weights
+    a = jax.lax.dot_general(x, w, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    a = a + b_ref[0]                          # (1, op) broadcasts
+    out_ref[0] = jnp.maximum(a, 0.0) if relu else a
+
+
+def splitnn_bottom_pallas(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, *,
+                          relu: bool, block_b: int = 512,
+                          interpret: bool = True) -> jnp.ndarray:
+    """x (M, Bp, dp) f32, w (M, dp, op) f32, b (M, 1, op) f32 (padded).
+
+    Bp % block_b == 0; dp % 128 == 0; op % 128 == 0.  Returns
+    (M, Bp, op) f32 — caller slices off padding.
+    """
+    m, bp, dp = x.shape
+    op = w.shape[2]
+    assert bp % block_b == 0 and dp % 128 == 0 and op % 128 == 0, \
+        (m, bp, dp, op, block_b)
+    grid = (m, bp // block_b)
+    kernel = functools.partial(_bottom_kernel, relu)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_b, dp), lambda m, i: (m, i, 0)),
+            pl.BlockSpec((1, dp, op), lambda m, i: (m, 0, 0)),  # resident
+            pl.BlockSpec((1, 1, op), lambda m, i: (m, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_b, op), lambda m, i: (m, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, bp, op), jnp.float32),
+        interpret=interpret,
+    )(x, w, b)

@@ -1,0 +1,71 @@
+"""Differentiable public wrapper for the fused SplitNN bottom layer.
+
+``splitnn_bottom(x, w, b, relu, impl, block_b)`` pads via the shared
+kernel layout (``repro.kernels.padding.pad_bottom_blocks``), dispatches
+to the Pallas kernel (``impl="pallas"``) or the jnp oracle
+(``impl="ref"``), and slices padding off.  A ``jax.custom_vjp`` makes
+the Pallas forward differentiable — pallas_call has no autodiff rule —
+and routes BOTH impls through the same backward so gradients cannot
+diverge between them:
+
+  dpre = g ⊙ 1[out > 0]      (ReLU mask; out > 0 ⟺ pre-activation > 0)
+  dx   = dpre @ wᵀ           db = Σ_B dpre
+  dw   = xᵀ @ dpre
+
+all as (M,)-batched dot_generals — the backward is itself two
+block-diagonal GEMMs of the same shape family as the forward, which XLA
+fuses well; only the forward needs the VMEM-residency treatment (it is
+the per-step hot path; the backward runs inside the same jit).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.padding import INTERPRET, pad_bottom_blocks
+from repro.kernels.splitnn_bottom.kernel import splitnn_bottom_pallas
+from repro.kernels.splitnn_bottom.ref import splitnn_bottom_ref
+
+
+def _forward(x, w, b, relu, impl, block_b):
+    m, n, d = x.shape
+    o = w.shape[2]
+    xp, wp, bp, bb = pad_bottom_blocks(x, w, b, block_b)
+    if impl == "pallas":
+        out = splitnn_bottom_pallas(xp, wp, bp, relu=relu, block_b=bb,
+                                    interpret=INTERPRET)
+    else:
+        out = splitnn_bottom_ref(xp, wp, bp, relu=relu)
+    return out[:, :n, :o]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def splitnn_bottom(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                   relu: bool = True, impl: str = "ref",
+                   block_b: int = 512) -> jnp.ndarray:
+    """x (M, B, d), w (M, d, o), b (M, o) -> (M, B, o) f32: all M clients'
+    bottom activations ``relu?(x[m] @ w[m] + b[m])`` in one fused pass."""
+    return _forward(x, w, b, relu, impl, block_b)
+
+
+def _fwd(x, w, b, relu, impl, block_b):
+    out = _forward(x, w, b, relu, impl, block_b)
+    return out, (x, w, out)
+
+
+def _bwd(relu, impl, block_b, res, g):
+    x, w, out = res
+    dpre = g * (out > 0) if relu else g                       # (M, B, o)
+    dx = jax.lax.dot_general(                                 # (M, B, d)
+        dpre, w, (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+    dw = jax.lax.dot_general(                                 # (M, d, o)
+        x, dpre, (((1,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+    db = jnp.sum(dpre, axis=1)                                # (M, o)
+    return dx, dw, db
+
+
+splitnn_bottom.defvjp(_fwd, _bwd)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the fused block-diagonal SplitNN bottom layer.
+
+Operates on the padded kernel layout (``padding.pad_bottom_blocks``):
+x (M, Bp, dp), w (M, dp, op), b (M, 1, op).  Each client m computes
+``relu?(x[m] @ w[m] + b[m])`` — the block-diagonal structure of the VFL
+bottom layer, one batched GEMM instead of an M-long loop of small GEMMs.
+The Pallas kernel must match this bitwise under the padding contract:
+output rows are independent (row i depends only on input row i), so
+tiling B cannot change any value.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def splitnn_bottom_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, *,
+                       relu: bool) -> jnp.ndarray:
+    """x (M, Bp, dp), w (M, dp, op), b (M, 1, op) -> (M, Bp, op) f32."""
+    def one(xm, wm, bm):
+        a = jax.lax.dot_general(xm, wm, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        a = a + bm
+        return jnp.maximum(a, 0.0) if relu else a
+    return jax.vmap(one)(x, w, b)

@@ -116,6 +116,17 @@ def batch_shard_map(fn, mesh, axis: str):
                       **_SHARD_MAP_NO_CHECK)
 
 
+def spec_shard_map(fn, mesh, in_specs, out_specs):
+    """shard_map with explicit per-arg PartitionSpecs (replication check
+    off, matching ``batch_shard_map``).  For paths that mix sharded and
+    replicated arguments — e.g. the VFL train engine, whose ``(params,
+    opt)`` carry is replicated while the per-step batch axis shards —
+    where the all-leading-dims contract of ``batch_shard_map`` doesn't
+    fit."""
+    return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **_SHARD_MAP_NO_CHECK)
+
+
 def padded_rows(b: int, n_shards: int) -> int:
     """The leading-dim size ``pad_batch_rows`` pads a B-row batch to."""
     return b + (-b) % n_shards

@@ -127,7 +127,75 @@ def test_coreset_sharded_ragged_byte_identical(mesh):
     assert np.array_equal(shrd.weights, base.weights)
 
 
+# ----------------------------------------------------------------- train
+
+@needs_devices
+@pytest.mark.parametrize("batch_size", [64, 60])   # divisible + padded
+def test_train_sharded_matches_single_device(mesh, batch_size):
+    """Scan-engine training with the per-step batch axis sharded over
+    the mesh: per-device partial loss/grad sums are psum'd before the
+    replicated Adam update, so results match single-device within
+    reassociation ulps (DESIGN.md §7 — a documented float tolerance,
+    unlike the byte-identical PSI/CSS paths)."""
+    from repro.core.splitnn import SplitNNConfig as Cfg, evaluate, \
+        train_splitnn
+
+    tr = make_cls_partition(n=420, d=12, seed=6)
+    te = make_cls_partition(n=200, d=12, seed=6)
+    cfg = Cfg(model="lr", n_classes=2, lr=0.05, batch_size=batch_size,
+              max_epochs=8)
+    base = train_splitnn(tr, cfg)
+    shrd = train_splitnn(tr, cfg, mesh=mesh)
+    assert shrd.engine_stats.shards == len(jax.devices())
+    assert base.engine_stats.shards == 1
+    assert shrd.engine_stats.padded_batch % len(jax.devices()) == 0
+    assert np.allclose(base.losses, shrd.losses, rtol=1e-4, atol=1e-6)
+    assert shrd.steps == base.steps
+    assert shrd.comm_bytes == base.comm_bytes   # modeled traffic invariant
+    assert abs(evaluate(base.params, cfg, te)
+               - evaluate(shrd.params, cfg, te)) <= 0.02
+    # the sync contract survives sharding: still one per epoch
+    assert shrd.engine_stats.host_syncs == shrd.epochs
+
+
+@needs_devices
+def test_train_sharded_mlp(mesh):
+    from repro.core.splitnn import SplitNNConfig as Cfg, train_splitnn
+
+    tr = make_cls_partition(n=256, d=12, classes=4, seed=7)
+    cfg = Cfg(model="mlp", n_classes=4, lr=0.01, batch_size=64,
+              max_epochs=5)
+    base = train_splitnn(tr, cfg)
+    shrd = train_splitnn(tr, cfg, mesh=mesh)
+    assert shrd.engine_stats.shards == len(jax.devices())
+    assert np.allclose(base.losses, shrd.losses, rtol=1e-4, atol=1e-6)
+
+
 # ------------------------------------------------------------- end to end
+
+@needs_devices
+def test_pipeline_mesh_trains_sharded(mesh):
+    """One mesh knob now covers all three stages: with a trainable model
+    the pipeline's train stage runs the sharded scan engine (align and
+    coreset stay byte-identical; training matches within the documented
+    float tolerance)."""
+    full = make_cls_partition(n=640, d=12, seed=3)
+    rows = np.random.default_rng(2).permutation(640)
+    tr, te = full.take(rows[:480]), full.take(rows[480:])
+    cfg = SplitNNConfig(model="lr", n_classes=2, lr=0.05, batch_size=64,
+                        max_epochs=15)
+    base = run_pipeline(tr, te, cfg, variant="treecss",
+                        clusters_per_client=4, seed=0)
+    shrd = run_pipeline(tr, te, cfg, variant="treecss",
+                        clusters_per_client=4, seed=0, mesh=mesh)
+    assert np.array_equal(shrd.coreset.indices, base.coreset.indices)
+    assert np.array_equal(shrd.coreset.weights, base.coreset.weights)
+    assert shrd.train.engine_stats.shards == len(jax.devices())
+    assert shrd.train.epochs == base.train.epochs
+    assert np.allclose(base.train.losses, shrd.train.losses,
+                       rtol=1e-4, atol=1e-6)
+    assert abs(shrd.metric - base.metric) <= 0.03
+
 
 @needs_devices
 def test_pipeline_mesh_knob_end_to_end(mesh):

@@ -17,8 +17,11 @@ def test_lr_trains_to_high_accuracy():
     rep = train_splitnn(tr, cfg)
     assert rep.losses[-1] < rep.losses[0]
     assert evaluate(rep.params, cfg, te) > 0.9
-    assert rep.comm_bytes == rep.steps * 64 * activation_bytes_per_sample(
-        cfg, tr.n_clients)
+    # every epoch trains ALL n rows (remainder batch included), so the
+    # instance-wise traffic counts actual rows, not steps * batch_size
+    assert rep.comm_bytes == rep.epochs * tr.n_samples * \
+        activation_bytes_per_sample(cfg, tr.n_clients)
+    assert rep.steps == rep.epochs * (-(-tr.n_samples // 64))
 
 
 def test_mlp_multiclass():

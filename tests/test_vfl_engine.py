@@ -1,0 +1,155 @@
+"""Scan-based VFL train engine (repro.train.vfl, DESIGN.md §7):
+parity with the legacy per-step loop, the one-host-sync-per-epoch
+contract, remainder-batch training, and weight semantics."""
+import numpy as np
+import pytest
+
+from conftest import make_cls_partition
+from repro.core.splitnn import (SplitNNConfig, activation_bytes_per_sample,
+                                evaluate, train_splitnn)
+
+
+def _flat(params):
+    import jax
+    return np.concatenate([np.asarray(x).ravel()
+                           for x in jax.tree_util.tree_leaves(params)])
+
+
+# ------------------------------------------------------------------ parity
+
+def test_scan_matches_legacy_loop():
+    """Same permutation schedule + same per-batch math (bottom_impl=
+    "loop") ⇒ the scan engine reproduces the legacy loop to within
+    reduction-reassociation ulps.  The only float difference is the
+    remainder batch (n=230, bs=64 leaves 38 rows): the scan path sums
+    the weighted loss over 64 pad-masked rows where the loop sums over
+    38 — zero terms are exact, but the reduction tree regroups."""
+    tr = make_cls_partition(n=230, d=12, seed=0)
+    cfg = SplitNNConfig(model="lr", n_classes=2, lr=0.05, batch_size=64,
+                        max_epochs=6)
+    loop = train_splitnn(tr, cfg, engine="loop")
+    scan = train_splitnn(tr, cfg, engine="scan", bottom_impl="loop")
+    assert np.allclose(loop.losses, scan.losses, rtol=1e-6, atol=1e-7)
+    assert np.allclose(_flat(loop.params), _flat(scan.params),
+                       rtol=1e-5, atol=1e-6)
+    assert loop.steps == scan.steps
+    assert loop.comm_bytes == scan.comm_bytes
+    # full batches see IDENTICAL per-step math: with n divisible by bs
+    # the trained params are bitwise-equal (the reported epoch losses
+    # still differ in ulps — host-f64 vs on-device-f32 accumulation)
+    tr64 = make_cls_partition(n=192, d=12, seed=0)
+    cfg64 = SplitNNConfig(model="lr", n_classes=2, lr=0.05, batch_size=64,
+                          max_epochs=4)
+    loop64 = train_splitnn(tr64, cfg64, engine="loop")
+    scan64 = train_splitnn(tr64, cfg64, engine="scan", bottom_impl="loop")
+    assert np.allclose(loop64.losses, scan64.losses, rtol=1e-6, atol=1e-7)
+    assert np.array_equal(_flat(loop64.params), _flat(scan64.params))
+
+
+@pytest.mark.parametrize("bottom_impl", ["ref", "pallas"])
+@pytest.mark.parametrize("model,n_classes", [("lr", 2), ("mlp", 4)])
+def test_scan_slab_matches_loop(model, n_classes, bottom_impl):
+    """The fused block-diagonal slab path (ref oracle / pallas kernel)
+    against the legacy loop: zero-padding is exact, so only GEMM
+    reassociation ulps separate them."""
+    tr = make_cls_partition(n=230, d=11, classes=n_classes, seed=1)
+    te = make_cls_partition(n=150, d=11, classes=n_classes, seed=1)
+    cfg = SplitNNConfig(model=model, n_classes=n_classes, lr=0.02,
+                        batch_size=64, max_epochs=6)
+    loop = train_splitnn(tr, cfg, engine="loop")
+    scan = train_splitnn(tr, cfg, engine="scan", bottom_impl=bottom_impl)
+    assert np.allclose(loop.losses, scan.losses, rtol=1e-4, atol=1e-6)
+    assert abs(evaluate(loop.params, cfg, te)
+               - evaluate(scan.params, cfg, te)) <= 0.02
+
+
+def test_linreg_scan_matches_loop():
+    from repro.data.synthetic import DatasetSpec, make_dataset
+    from repro.data.vertical import partition_features
+    x, y = make_dataset(DatasetSpec("r", 300, 10, 0), seed=2)
+    tr = partition_features(x, y, 3)
+    cfg = SplitNNConfig(model="linreg", n_classes=0, lr=0.05, batch_size=64,
+                        max_epochs=5)
+    loop = train_splitnn(tr, cfg, engine="loop")
+    scan = train_splitnn(tr, cfg)
+    assert np.allclose(loop.losses, scan.losses, rtol=1e-4, atol=1e-6)
+
+
+# ------------------------------------------------------- dispatch contract
+
+def test_scan_one_dispatch_and_sync_per_epoch():
+    """The engine's measured counts: the scan path dispatches and syncs
+    exactly once per epoch; the legacy loop pays both once per STEP."""
+    tr = make_cls_partition(n=300, d=9, seed=2)
+    cfg = SplitNNConfig(model="lr", n_classes=2, lr=0.05, batch_size=64,
+                        max_epochs=7)
+    scan = train_splitnn(tr, cfg)
+    st = scan.engine_stats
+    assert st.engine == "scan"
+    assert st.dispatches == scan.epochs
+    assert st.host_syncs == scan.epochs
+    loop = train_splitnn(tr, cfg, engine="loop")
+    lt = loop.engine_stats
+    assert lt.dispatches == loop.steps
+    assert lt.host_syncs == loop.steps
+    assert loop.steps > loop.epochs          # the contrast being claimed
+
+
+# -------------------------------------------------------- remainder batch
+
+@pytest.mark.parametrize("engine", ["scan", "loop"])
+def test_remainder_rows_trained(engine):
+    """n=70, bs=64: the seed loop (range(0, n-bs+1, bs)) trained 64 of 70
+    rows per epoch.  Both engines must now train all n rows and count
+    the actual rows in comm_bytes."""
+    tr = make_cls_partition(n=70, d=8, seed=3)
+    cfg = SplitNNConfig(model="lr", n_classes=2, lr=0.05, batch_size=64,
+                        max_epochs=4)
+    rep = train_splitnn(tr, cfg, engine=engine)
+    per = activation_bytes_per_sample(cfg, tr.n_clients)
+    assert rep.steps == rep.epochs * 2       # 64-row + 6-row batches
+    assert rep.comm_bytes == rep.epochs * 70 * per
+
+
+def test_remainder_mask_excludes_pad_rows():
+    """Poisoning row 0 (the scan schedule's pad target) with huge
+    features must not leak into training through the padded slots: with
+    row 0's weight at 0 the result must match training without row 0 at
+    all (identical schedule up to the same-order permutation)."""
+    tr = make_cls_partition(n=65, d=8, seed=4)
+    tr.client_features[0][0] *= 1e6          # poison the pad target row
+    w = np.ones(65, np.float32)
+    w[0] = 0.0
+    cfg = SplitNNConfig(model="lr", n_classes=2, lr=0.05, batch_size=64,
+                        max_epochs=3)
+    rep = train_splitnn(tr, cfg, sample_weights=w)
+    assert np.all(np.isfinite(rep.losses))
+    assert np.all(np.isfinite(_flat(rep.params)))
+
+
+# --------------------------------------------------------------- weights
+
+def test_sample_weights_none_equals_ones():
+    tr = make_cls_partition(n=300, d=8, seed=3)
+    cfg = SplitNNConfig(model="lr", n_classes=2, lr=0.05, batch_size=50,
+                        max_epochs=6)
+    r_none = train_splitnn(tr, cfg, sample_weights=None)
+    r_ones = train_splitnn(tr, cfg,
+                           sample_weights=np.ones(tr.n_samples, np.float32))
+    assert np.array_equal(_flat(r_none.params), _flat(r_ones.params))
+    assert r_none.losses == r_ones.losses
+    # legacy loop takes a different code path for None (w=None inside
+    # the jit'd loss) — same math, ulps-tight
+    l_none = train_splitnn(tr, cfg, engine="loop", sample_weights=None)
+    l_ones = train_splitnn(tr, cfg, engine="loop",
+                           sample_weights=np.ones(tr.n_samples, np.float32))
+    assert np.allclose(l_none.losses, l_ones.losses, rtol=1e-6, atol=1e-9)
+
+
+def test_scan_convergence_criterion_stops_early():
+    tr = make_cls_partition(n=200, d=6, seed=5, margin=6.0)
+    cfg = SplitNNConfig(model="lr", n_classes=2, lr=0.1, batch_size=50,
+                        max_epochs=200, convergence_eps=1e-3)
+    rep = train_splitnn(tr, cfg)
+    assert rep.epochs < 200
+    assert rep.engine_stats.host_syncs == rep.epochs
