@@ -1,0 +1,123 @@
+"""Deterministic engine perf contract gate (ISSUE 5, DESIGN.md §8).
+
+``experiments/bench/engine_contract.json`` pins the scan engine's
+EXECUTION-COUNT invariants per Table-2 smoke row — dispatches and host
+syncs per epoch (the one-of-each-per-epoch contract), modeled
+``comm_bytes`` per epoch, steps per epoch, and the coreset size — so a
+regression that re-introduces per-step dispatches, per-step blocking
+syncs, silent remainder drops, or a changed communication model fails
+CI even when wall time looks fine.  Counters, not seconds: the gate is
+runner-noise-free by construction, and the same contract holds on 1-D
+and 2-D meshes (sharding never changes the counters — that is itself
+part of the contract, so shard counts are deliberately NOT pinned).
+
+Usage (CI runs the first form after ``run_e2e(smoke=True)``):
+
+    python -m benchmarks.check_contract
+    python -m benchmarks.check_contract --csv PATH --contract PATH
+    python -m benchmarks.check_contract --write     # regenerate baseline
+
+Exit status: 0 = every row matches; 1 = drift (diff printed per field).
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import json
+import os
+import sys
+
+DEFAULT_CSV = os.path.join("experiments", "bench", "table2_e2e.csv")
+DEFAULT_CONTRACT = os.path.join("experiments", "bench",
+                                "engine_contract.json")
+
+KEY = ("dataset", "model", "variant")
+
+
+def _ratio(total: int, epochs: int) -> float:
+    return total / epochs if epochs else 0.0
+
+
+def row_counters(row: dict) -> dict:
+    """The contract-relevant counters of one table2_e2e.csv row."""
+    epochs = int(row["epochs"])
+    return {
+        "n_train": int(row["n_train"]),
+        "steps_per_epoch": _ratio(int(row["steps"]), epochs),
+        "dispatches_per_epoch": _ratio(int(row["dispatches"]), epochs),
+        "host_syncs_per_epoch": _ratio(int(row["host_syncs"]), epochs),
+        "comm_bytes_per_epoch": _ratio(int(row["comm_bytes"]), epochs),
+    }
+
+
+def load_rows(csv_path: str) -> dict:
+    rows = {}
+    with open(csv_path) as f:
+        for row in csv.DictReader(f):
+            if not row.get("dispatches"):       # knn rows have no engine
+                continue
+            rows[tuple(row[k] for k in KEY)] = row_counters(row)
+    return rows
+
+
+def check(csv_path: str = DEFAULT_CSV,
+          contract_path: str = DEFAULT_CONTRACT) -> int:
+    with open(contract_path) as f:
+        contract = {tuple(r[k] for k in KEY): r["counters"]
+                    for r in json.load(f)["rows"]}
+    got = load_rows(csv_path)
+    failures = []
+    for key, expect in contract.items():
+        if key not in got:
+            failures.append(f"{key}: row missing from {csv_path}")
+            continue
+        for field, want in expect.items():
+            have = got[key].get(field)
+            if have != want:
+                failures.append(
+                    f"{key}: {field} = {have!r}, contract pins {want!r}")
+    for key in got:
+        if key not in contract:
+            failures.append(f"{key}: row not covered by the contract — "
+                            f"regenerate with --write if intended")
+    if failures:
+        print(f"ENGINE CONTRACT VIOLATED ({len(failures)} finding(s)):")
+        for f_ in failures:
+            print(f"  - {f_}")
+        return 1
+    print(f"engine contract OK: {len(contract)} row(s) match "
+          f"{contract_path}")
+    return 0
+
+
+def write(csv_path: str = DEFAULT_CSV,
+          contract_path: str = DEFAULT_CONTRACT) -> int:
+    rows = [{**dict(zip(KEY, key)), "counters": counters}
+            for key, counters in sorted(load_rows(csv_path).items())]
+    with open(contract_path, "w") as f:
+        json.dump({
+            "source": "benchmarks.table2_framework.run_e2e(smoke=True)",
+            "note": "execution-count invariants only (no wall times); "
+                    "regenerate with `python -m benchmarks.check_contract "
+                    "--write` after an intentional engine change",
+            "rows": rows,
+        }, f, indent=2)
+        f.write("\n")
+    print(f"wrote {len(rows)} contract row(s) -> {contract_path}")
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--csv", default=DEFAULT_CSV)
+    ap.add_argument("--contract", default=DEFAULT_CONTRACT)
+    ap.add_argument("--write", action="store_true",
+                    help="regenerate the contract from the CSV instead "
+                         "of checking against it")
+    args = ap.parse_args()
+    fn = write if args.write else check
+    sys.exit(fn(args.csv, args.contract))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,17 @@
 """Benchmark driver: one module per paper table/figure + the roofline
 report. ``PYTHONPATH=src python -m benchmarks.run [--full]``.
+
+A failing sub-benchmark no longer aborts the sweep silently-green: the
+driver runs every remaining job, prints the per-job tracebacks, and
+exits non-zero if ANY job raised — so CI cannot upload partial CSVs as
+if the sweep succeeded (the ``check_contract`` gate depends on this).
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
+import traceback
 
 
 def main() -> None:
@@ -30,13 +37,24 @@ def main() -> None:
         ("roofline", roofline.run),        # §Roofline report (dry-run JSONs)
     ]
     t00 = time.perf_counter()
+    failures = []
     for name, fn in jobs:
         if only and name not in only:
             continue
         print(f"\n######## {name} ########")
         t0 = time.perf_counter()
-        fn(quick=quick)
+        try:
+            fn(quick=quick)
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+            print(f"[{name}] FAILED after {time.perf_counter()-t0:.1f}s")
+            continue
         print(f"[{name}] done in {time.perf_counter()-t0:.1f}s")
+    if failures:
+        print(f"\nBENCHMARKS FAILED: {', '.join(failures)} "
+              f"(after {time.perf_counter()-t00:.1f}s)")
+        sys.exit(1)
     print(f"\nALL BENCHMARKS DONE in {time.perf_counter()-t00:.1f}s")
 
 

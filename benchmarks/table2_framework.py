@@ -108,7 +108,9 @@ def run_e2e(quick: bool = True, smoke: bool = False, mesh=None,
                 "steps": rep.train.steps,
                 "dispatches": es.dispatches if es else "",
                 "host_syncs": es.host_syncs if es else "",
+                "comm_bytes": rep.train.comm_bytes,
                 "train_shards": es.shards if es else "",
+                "model_shards": es.model_shards if es else "",
                 "speedup_vs_starall": fmt(
                     totals["starall"] / max(rep.total_seconds, 1e-12), 2),
             })

@@ -280,8 +280,13 @@ def cluster_coreset(partition: VerticalPartition, clusters_per_client: int, *,
     wall-clock / M approximates ONE client's concurrent compute —
     recorded per client to keep ``makespan_seconds`` on the documented
     max-over-clients model.  ``mesh`` shards the client batch over one
-    mesh axis (``shard_axis`` or the mesh's data axis) so CSS scales
-    past single-device memory; selection stays byte-identical.
+    mesh axis (``shard_axis`` or the mesh's data axis — a 2-D
+    ``(data, model)`` train mesh replicates over ``model``) so CSS
+    scales past single-device memory; selection stays byte-identical.
+    ``kmeans_algo="minibatch"`` (the beyond-paper large-client path)
+    now gathers each Sculley minibatch INSIDE the update kernel
+    (``kmeans_update(idx=)``, scalar-prefetched indices — DESIGN.md
+    §8), dropping the per-iteration ``points[idx]`` HBM round trip.
     """
     feats = list(partition.client_features)
     n_shards = 1

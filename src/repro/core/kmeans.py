@@ -27,12 +27,20 @@ def _assign(points, centroids, impl: str):
     return ref.kmeans_assign(points, centroids)
 
 
-def _update(points, centroids, impl: str):
-    """Fused Lloyd update: (assign (N,), sqd (N,), sums (K,d), counts (K,))."""
+def _update(points, centroids, impl: str, idx=None):
+    """Fused Lloyd update: (assign (N,), sqd (N,), sums (K,d), counts (K,)).
+
+    ``idx`` (B,) i32 runs the update over the minibatch ``points[idx]``:
+    the pallas impl scalar-prefetches the indices into the kernel so the
+    gathered batch never round-trips through HBM (DESIGN.md §8); the ref
+    oracle gathers then updates — bitwise-identical results either way.
+    """
     if impl == "pallas":
         from repro.kernels.kmeans_update import ops
-        return ops.kmeans_update(points, centroids)
+        return ops.kmeans_update(points, centroids, idx=idx)
     from repro.kernels.kmeans_update import ref
+    if idx is not None:
+        points = points[idx]
     return ref.kmeans_update(points, centroids)
 
 
@@ -148,11 +156,24 @@ def kmeans_minibatch_fit(key, points: jnp.ndarray, k: int, *,
                                  replace=False)
     centroids = kmeans_pp_init(key, points[seed_idx], k)
 
+    # pallas path: align d to the kernel lane width ONCE, outside the
+    # scan, so the per-step gather-fused update passes the loop-invariant
+    # point set through without re-padding it (DESIGN.md §8); the update
+    # math on the zero columns is exactly 0.0, so the sliced centroids
+    # are unchanged.  The fused gather itself (scalar-prefetched idx)
+    # removes the points[idx] HBM round trip before the kernel.
+    from repro.kernels.padding import round_up
+    dp = round_up(d, 128)
+    if impl == "pallas" and dp > d:
+        pts_upd = jnp.pad(points, ((0, 0), (0, dp - d)))
+        cents0 = jnp.pad(centroids, ((0, 0), (0, dp - d)))
+    else:
+        pts_upd, cents0 = points, centroids
+
     def step(carry, key_i):
         cents, counts = carry
         idx = jax.random.randint(key_i, (batch,), 0, n)
-        pts = points[idx]
-        _, _, sums, batch_counts = _update(pts, cents, impl)
+        _, _, sums, batch_counts = _update(pts_upd, cents, impl, idx=idx)
         new_counts = counts + batch_counts
         # per-center learning rate 1/count (Sculley eq. 1)
         target = sums / jnp.maximum(batch_counts, 1.0)[:, None]
@@ -163,6 +184,7 @@ def kmeans_minibatch_fit(key, points: jnp.ndarray, k: int, *,
 
     keys = jax.random.split(key, iters)
     (centroids, _), _ = jax.lax.scan(
-        step, (centroids, jnp.zeros((k,), jnp.float32)), keys)
+        step, (cents0, jnp.zeros((k,), jnp.float32)), keys)
+    centroids = centroids[:, :d]
     assign, sqd = _assign(points, centroids, impl)
     return centroids, assign, sqd

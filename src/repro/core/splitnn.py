@@ -109,7 +109,7 @@ def splitnn_forward(params, cfg: SplitNNConfig, xs: Sequence[jnp.ndarray]):
     """xs: per-client feature slices [(B, d_m)]. Returns logits/preds (B, o).
 
     Per-client loop form — the slab form (one fused block-diagonal pass
-    over all M clients) is ``repro.train.vfl.forward_slab``.
+    over all M clients) is ``repro.train.vfl.forward_slab_packed``.
     """
     acts = []
     for bp, x in zip(params["bottoms"], xs):
@@ -156,16 +156,21 @@ def train_splitnn(partition: VerticalPartition, cfg: SplitNNConfig, *,
                   verbose: bool = False, engine: str = "scan",
                   mesh=None, shard_axis: Optional[str] = None,
                   bottom_impl: str = "ref",
-                  block_b: int = 512) -> TrainReport:
+                  block_b: int = 512,
+                  fuse_gather: bool = True) -> TrainReport:
     """Mini-batch Adam training to the paper's convergence criterion.
 
     Thin stage entry point over ``repro.train.vfl``:
 
     - ``engine="scan"`` (default): compiled epoch engine — one dispatch
       and one host sync per epoch, remainder batches pad-and-masked,
-      ``mesh=``/``shard_axis=`` shard the per-step batch axis, and
-      ``bottom_impl`` selects the block-diagonal bottom layer
-      ("ref" slab oracle / "pallas" fused kernel / "loop" per-client).
+      ``mesh=``/``shard_axis=`` shard the per-step batch axis over
+      ``data`` and (on a 2-D ``(data, model)`` mesh) the M-client
+      bottom axis over ``model`` (DESIGN.md §8), ``bottom_impl``
+      selects the block-diagonal bottom layer ("ref" slab oracle /
+      "pallas" fused kernel / "loop" per-client), and ``fuse_gather``
+      scalar-prefetches the per-step schedule indices into that pass
+      (bitwise-equal to the explicit ``slab[:, idx, :]`` gather).
     - ``engine="loop"``: the legacy per-minibatch host loop (parity
       oracle and dispatch-overhead baseline; single-device only).
     """
@@ -183,7 +188,8 @@ def train_splitnn(partition: VerticalPartition, cfg: SplitNNConfig, *,
     return vfl.train_scan(partition, cfg, sample_weights=sample_weights,
                           bandwidth=bandwidth, latency=latency, mesh=mesh,
                           shard_axis=shard_axis, bottom_impl=bottom_impl,
-                          block_b=block_b, verbose=verbose)
+                          block_b=block_b, fuse_gather=fuse_gather,
+                          verbose=verbose)
 
 
 # ---------------------------------------------------------------- evaluation

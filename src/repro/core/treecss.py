@@ -100,11 +100,16 @@ def run_pipeline(train_part: VerticalPartition,
                  train_engine: str = "scan",
                  bottom_impl: str = "ref") -> PipelineReport:
     """``mesh`` (with optional ``shard_axis``) now shards ALL THREE
-    device-path stages over one mesh axis: the PSI engine's per-round
-    pair batch (``psi_backend="device"``), the CSS batched client fit,
-    and the SplitNN scan engine's per-step batch axis.  PSI/CSS results
-    are byte-identical to the single-device run; sharded training
-    matches within gemm/psum-reassociation ulps (DESIGN.md §5, §7).
+    device-path stages through one knob, and accepts 1-D ``("data",)``
+    or 2-D ``(data, model)`` meshes (``launch.mesh.make_train_mesh``):
+    the PSI engine's per-round pair batch (``psi_backend="device"``)
+    and the CSS batched client fit shard over ``data`` (replicating
+    over ``model`` — byte-identical to single-device either way), and
+    the SplitNN scan engine shards its per-step batch axis over
+    ``data`` plus, on a 2-D mesh, the M-client bottom axis over
+    ``model`` (the client→server activation send lowers to one
+    all-gather; DESIGN.md §8) — training matches single-device within
+    gemm/psum-reassociation ulps (DESIGN.md §5, §7).
     ``train_engine``/``bottom_impl`` select the training engine and the
     block-diagonal bottom implementation ("pallas" = the fused
     VMEM-resident kernel on real TPU) — see ``train_splitnn``."""

@@ -33,16 +33,19 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 MASK_LARGE = 3.4e38  # python float: +inf stand-in for masked centroid columns
 
 
-def _update_kernel(k_real: int, n_real: int, block_n: int,
-                   points_ref, cents_ref,
-                   assign_ref, dist_ref, sums_ref, counts_ref):
-    i = pl.program_id(0)
-    p = points_ref[...]                       # (BN, d)   resident tile
-    c = cents_ref[...]                        # (Kp, d)
+def _tile_update(p, c, k_real: int, row):
+    """Shared assign + accumulate math for one resident (BN, d) tile.
+
+    ``row`` is the tile's global row-index column (used only to mask
+    padded rows OUT of the one-hot); returns (assign, dist, tile_sums,
+    tile_counts).  One definition so the dense and gather-fused kernels
+    cannot diverge in tie-breaks or accumulation order.
+    """
     p2 = jnp.sum(p * p, axis=1, keepdims=True)            # (BN,1)
     c2 = jnp.sum(c * c, axis=1)[None]                     # (1,Kp)
     # MXU matmul #1: (BN,d) x (d,Kp)
@@ -54,17 +57,30 @@ def _update_kernel(k_real: int, n_real: int, block_n: int,
     # leave tiny negatives whose ordering would otherwise flip ties
     d2 = jnp.where(col < k_real, jnp.maximum(d2, 0.0), MASK_LARGE)
     assign = jnp.argmin(d2, axis=1).astype(jnp.int32)     # (BN,)
-    assign_ref[...] = assign
-    dist_ref[...] = jnp.min(d2, axis=1)
+    dist = jnp.min(d2, axis=1)
 
     # one-hot rebuilt in VREGs; padded rows masked out of the accumulation
-    row = i * block_n + jax.lax.broadcasted_iota(jnp.int32, d2.shape, 0)
-    one_hot = jnp.where((col == assign[:, None]) & (row < n_real),
+    one_hot = jnp.where((col == assign[:, None]) & (row[:, None] >= 0),
                         1.0, 0.0).astype(jnp.float32)     # (BN,Kp)
     # MXU matmul #2 against the SAME resident tile: (Kp,BN) x (BN,d)
     tile_sums = jax.lax.dot_general(one_hot, p, (((0,), (0,)), ((), ())),
                                     preferred_element_type=jnp.float32)
     tile_counts = jnp.sum(one_hot, axis=0)[None]          # (1,Kp)
+    return assign, dist, tile_sums, tile_counts
+
+
+def _update_kernel(k_real: int, n_real: int, block_n: int,
+                   points_ref, cents_ref,
+                   assign_ref, dist_ref, sums_ref, counts_ref):
+    i = pl.program_id(0)
+    p = points_ref[...]                       # (BN, d)   resident tile
+    c = cents_ref[...]                        # (Kp, d)
+    row = i * block_n + jax.lax.broadcasted_iota(jnp.int32, (p.shape[0],), 0)
+    valid_row = jnp.where(row < n_real, row, -1)
+    assign, dist, tile_sums, tile_counts = _tile_update(p, c, k_real,
+                                                        valid_row)
+    assign_ref[...] = assign
+    dist_ref[...] = dist
 
     @pl.when(i == 0)
     def _():
@@ -110,3 +126,87 @@ def kmeans_update_pallas(points: jnp.ndarray, centroids: jnp.ndarray, *,
         ],
         interpret=interpret,
     )(points, centroids)
+
+
+# ------------------------------------------------- scalar-prefetch gather
+
+
+def _update_gather_kernel(k_real: int, b_real: int, block_n: int,
+                          idx_ref, points_ref, cents_ref,
+                          assign_ref, dist_ref, sums_ref, counts_ref):
+    i = pl.program_id(0)
+    dp = points_ref.shape[1]
+
+    def gather_row(r, acc):
+        j = idx_ref[i * block_n + r]              # prefetched batch index
+        row = points_ref[pl.ds(j, 1), :]          # (1, dp) dynamic slice
+        return jax.lax.dynamic_update_slice(acc, row, (r, 0))
+
+    p = jax.lax.fori_loop(0, block_n, gather_row,
+                          jnp.zeros((block_n, dp), jnp.float32))
+    c = cents_ref[...]                            # (Kp, dp)
+    row = i * block_n + jax.lax.broadcasted_iota(jnp.int32, (block_n,), 0)
+    valid_row = jnp.where(row < b_real, row, -1)  # mask idx-padding slots
+    assign, dist, tile_sums, tile_counts = _tile_update(p, c, k_real,
+                                                        valid_row)
+    assign_ref[...] = assign
+    dist_ref[...] = dist
+
+    @pl.when(i == 0)
+    def _():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    sums_ref[...] += tile_sums
+    counts_ref[...] += tile_counts
+
+
+def kmeans_update_gather_pallas(idx: jnp.ndarray, points: jnp.ndarray,
+                                centroids: jnp.ndarray, *, k_real: int,
+                                b_real: int, block_n: int = 1024,
+                                interpret: bool = True):
+    """Gather-fused Lloyd update for the mini-batch path: the
+    ``points[idx]`` minibatch gather moves INTO the kernel via scalar
+    prefetch, so the gathered batch never round-trips through HBM
+    before the assign+accumulate pass.
+
+    ``idx`` (Bp,) i32 (Bp % block_n == 0; padding slots point at row 0
+    per ``padding.pad_gather_idx`` and are masked out of sums/counts by
+    ``b_real``), ``points`` (Np, dp) f32 — the FULL point set is the
+    resident block, read from HBM once per call — ``centroids``
+    (Kp, dp) f32.  Returns (assign (Bp,) i32, sq_dist (Bp,) f32,
+    sums (Kp, dp) f32, counts (1, Kp) f32) over the gathered rows,
+    bitwise-equal to gathering first and running the dense kernel.
+    """
+    np_, dp = points.shape
+    kp = centroids.shape[0]
+    bp = idx.shape[0]
+    assert bp % block_n == 0 and dp % 128 == 0 and kp % 128 == 0, \
+        (bp, dp, kp, block_n)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bp // block_n,),
+        in_specs=[
+            pl.BlockSpec((np_, dp), lambda i, idx_ref: (0, 0)),
+            pl.BlockSpec((kp, dp), lambda i, idx_ref: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i, idx_ref: (i,)),
+            pl.BlockSpec((block_n,), lambda i, idx_ref: (i,)),
+            pl.BlockSpec((kp, dp), lambda i, idx_ref: (0, 0)),  # revisited
+            pl.BlockSpec((1, kp), lambda i, idx_ref: (0, 0)),   # revisited
+        ],
+    )
+    kernel = functools.partial(_update_gather_kernel, k_real, b_real,
+                               block_n)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((bp,), jnp.int32),
+            jax.ShapeDtypeStruct((bp,), jnp.float32),
+            jax.ShapeDtypeStruct((kp, dp), jnp.float32),
+            jax.ShapeDtypeStruct((1, kp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(jnp.asarray(idx, jnp.int32), points, centroids)

@@ -19,6 +19,13 @@ import jax.numpy as jnp
 # REPRO_PALLAS_INTERPRET=0 to compile the kernels with Mosaic.
 INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
 
+# Resident-block budget for the scalar-prefetch gather kernels on real
+# TPU: a full (N, d_pad) slab past it cannot sit in VMEM, so the ops
+# wrappers fall back to gather-then-dense (bitwise-identical values).
+# Interpret mode has no VMEM — the container always exercises the fused
+# kernels.
+GATHER_VMEM_BUDGET = 12 * 2**20
+
 
 def round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
@@ -44,6 +51,56 @@ def pad_points_centroids(points: jnp.ndarray, centroids: jnp.ndarray,
     return p, c, bn
 
 
+def pad_gather_idx(idx: jnp.ndarray, block: int,
+                   align: int = 8) -> Tuple[jnp.ndarray, int, int]:
+    """Pad a (B,) i32 gather-index vector to the scalar-prefetch kernel
+    layout shared by ``splitnn_bottom`` and ``kmeans_update``.
+
+    Returns (idx (Bp,) i32, bb, B) with Bp % bb == 0, where bb is
+    ``block`` shrunk to the padded B for small batches (the same rule
+    the dense batch pads use, so fused and unfused tilings coincide).
+    Padding slots point at row 0 — a real, in-bounds row — which keeps
+    every gathered tile shape- and dtype-representative; the padded
+    positions are sliced off (per-row outputs) or masked out of every
+    accumulation (per-cluster sums/counts) downstream, exactly like the
+    zero-padded rows of the dense contract.
+    """
+    b = int(idx.shape[0])
+    bb = min(block, round_up(b, align))
+    bp = round_up(b, bb)
+    idx = jnp.asarray(idx, jnp.int32)
+    if bp > b:
+        idx = jnp.concatenate([idx, jnp.zeros((bp - b,), jnp.int32)])
+    return idx, bb, b
+
+
+def pad_bottom_blocks_gather(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray
+                             ) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                        jnp.ndarray]:
+    """d/o-only padding for the ``splitnn_bottom`` gather kernel.
+
+    The gather grid tiles the idx vector, not the slab rows, so the full
+    (M, N, d) slab needs NO row padding — only d aligned to 128 (and w/b
+    padded as in ``pad_bottom_blocks``).  An already-aligned f32 slab
+    passes through untouched, which is how the train engine avoids
+    re-copying the loop-invariant slab on every scan step: it pre-pads d
+    once outside the scan (``train.vfl``), and this helper becomes a
+    no-op on x.
+    """
+    m, n, d = x.shape
+    dw, o = w.shape[1], w.shape[2]
+    dp, op = round_up(dw, 128), round_up(o, 128)
+    assert round_up(d, 128) == dp, (d, dw)
+    x = x.astype(jnp.float32)
+    if d < dp:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, dp - d)))
+    wp = jnp.zeros((m, dp, op), jnp.float32).at[:, :dw, :o].set(
+        w.astype(jnp.float32))
+    bp = jnp.zeros((m, 1, op), jnp.float32).at[:, 0, :o].set(
+        b.astype(jnp.float32))
+    return x, wp, bp
+
+
 def pad_bottom_blocks(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
                       block_b: int
                       ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, int]:
@@ -54,15 +111,18 @@ def pad_bottom_blocks(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
     with Bp % bb == 0 and dp, op multiples of 128, where bb is block_b
     shrunk to the padded B for small batches.  Zero padding is exact:
     padded d columns multiply zero features, padded o columns read back
-    sliced off, padded B rows are discarded by the caller.
+    sliced off, padded B rows are discarded by the caller.  ``x`` may
+    arrive pre-padded wider than ``w`` (the train engine aligns the
+    slab's d once, outside its scan) — the zero columns land on zero
+    weight rows either way.
     """
     m, n, d = x.shape
-    o = w.shape[2]
+    dw, o = w.shape[1], w.shape[2]
     bb = min(block_b, round_up(n, 8))
-    bp, dp, op = round_up(n, bb), round_up(d, 128), round_up(o, 128)
+    bp, dp, op = round_up(n, bb), round_up(max(d, dw), 128), round_up(o, 128)
     xp = jnp.zeros((m, bp, dp), jnp.float32).at[:, :n, :d].set(
         x.astype(jnp.float32))
-    wp = jnp.zeros((m, dp, op), jnp.float32).at[:, :d, :o].set(
+    wp = jnp.zeros((m, dp, op), jnp.float32).at[:, :dw, :o].set(
         w.astype(jnp.float32))
     bb_pad = jnp.zeros((m, 1, op), jnp.float32).at[:, 0, :o].set(
         b.astype(jnp.float32))

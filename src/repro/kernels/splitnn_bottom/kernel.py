@@ -25,6 +25,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _bottom_kernel(relu: bool, x_ref, w_ref, b_ref, out_ref):
@@ -62,3 +63,72 @@ def splitnn_bottom_pallas(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, *,
         out_shape=jax.ShapeDtypeStruct((m, bp, op), jnp.float32),
         interpret=interpret,
     )(x, w, b)
+
+
+# ------------------------------------------------- scalar-prefetch gather
+
+
+def _bottom_gather_kernel(relu: bool, block_b: int, idx_ref,
+                          x_ref, w_ref, b_ref, out_ref):
+    i = pl.program_id(1)
+    dp = x_ref.shape[2]
+
+    def gather_row(r, acc):
+        j = idx_ref[i * block_b + r]              # prefetched schedule slot
+        row = x_ref[0, pl.ds(j, 1), :]            # (1, dp) dynamic slice
+        return jax.lax.dynamic_update_slice(acc, row, (r, 0))
+
+    x = jax.lax.fori_loop(0, block_b, gather_row,
+                          jnp.zeros((block_b, dp), jnp.float32))
+    w = w_ref[0]                                  # (dp, op) resident weights
+    a = jax.lax.dot_general(x, w, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    a = a + b_ref[0]
+    out_ref[0] = jnp.maximum(a, 0.0) if relu else a
+
+
+def splitnn_bottom_gather_pallas(idx: jnp.ndarray, x: jnp.ndarray,
+                                 w: jnp.ndarray, b: jnp.ndarray, *,
+                                 relu: bool, block_b: int = 512,
+                                 interpret: bool = True) -> jnp.ndarray:
+    """Gather-fused forward: the per-step ``slab[:, idx, :]`` minibatch
+    gather moves INTO the kernel via scalar prefetch
+    (``pltpu.PrefetchScalarGridSpec``), so the gathered batch never
+    round-trips through HBM between the schedule lookup and the matmul.
+
+    ``idx`` (Bp,) i32 schedule indices (prefetched, available before the
+    body runs), ``x`` (M, Np, dp) f32 — client m's FULL feature slab is
+    the resident block (index map ignores the batch index, so the
+    sequential grid reads it from HBM once per client, like the weight
+    block), ``w`` (M, dp, op), ``b`` (M, 1, op).  Bp % block_b == 0;
+    dp % 128 == 0; op % 128 == 0; every idx value < Np (padding slots
+    point at row 0 per ``padding.pad_gather_idx``).  Returns
+    (M, Bp, op) f32 — caller slices off the idx padding.
+
+    VMEM bound: the resident slab block is Np·dp·4 bytes per client
+    (ops.py falls back to the dense path past the budget on real TPU;
+    values are bitwise-identical either way).
+    """
+    m, np_, dp = x.shape
+    op = w.shape[2]
+    bp = idx.shape[0]
+    assert bp % block_b == 0 and dp % 128 == 0 and op % 128 == 0, \
+        (m, bp, dp, op, block_b)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(m, bp // block_b),
+        in_specs=[
+            pl.BlockSpec((1, np_, dp), lambda m, i, idx_ref: (m, 0, 0)),
+            pl.BlockSpec((1, dp, op), lambda m, i, idx_ref: (m, 0, 0)),
+            pl.BlockSpec((1, 1, op), lambda m, i, idx_ref: (m, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_b, op),
+                               lambda m, i, idx_ref: (m, i, 0)),
+    )
+    kernel = functools.partial(_bottom_gather_kernel, relu, block_b)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, bp, op), jnp.float32),
+        interpret=interpret,
+    )(jnp.asarray(idx, jnp.int32), x, w, b)

@@ -1,16 +1,28 @@
 """Differentiable public wrapper for the fused SplitNN bottom layer.
 
-``splitnn_bottom(x, w, b, relu, impl, block_b)`` pads via the shared
-kernel layout (``repro.kernels.padding.pad_bottom_blocks``), dispatches
-to the Pallas kernel (``impl="pallas"``) or the jnp oracle
-(``impl="ref"``), and slices padding off.  A ``jax.custom_vjp`` makes
-the Pallas forward differentiable — pallas_call has no autodiff rule —
-and routes BOTH impls through the same backward so gradients cannot
-diverge between them:
+``splitnn_bottom(x, w, b, relu, impl, block_b, idx=None)`` pads via the
+shared kernel layout (``repro.kernels.padding.pad_bottom_blocks``),
+dispatches to the Pallas kernel (``impl="pallas"``) or the jnp oracle
+(``impl="ref"``), and slices padding off.
+
+``idx`` enables the scalar-prefetch gather fusion (DESIGN.md §8): the
+caller hands the FULL (M, N, d) slab plus a (B,) i32 index vector and
+the per-step minibatch gather happens inside the pass — the ref oracle
+gathers with ``jnp.take`` then runs the dense pass (the bitwise
+contract), the Pallas impl prefetches the indices into the kernel
+(``splitnn_bottom_gather_pallas``) so the gathered batch never makes a
+separate HBM round trip.  Both produce bitwise-identical outputs, and
+both route through the SAME backward, so fused/unfused gradients for
+``w``/``b`` are bitwise-equal as well.
+
+A ``jax.custom_vjp`` makes the Pallas forward differentiable —
+pallas_call has no autodiff rule — and routes BOTH impls through the
+same backward so gradients cannot diverge between them:
 
   dpre = g ⊙ 1[out > 0]      (ReLU mask; out > 0 ⟺ pre-activation > 0)
   dx   = dpre @ wᵀ           db = Σ_B dpre
-  dw   = xᵀ @ dpre
+  dw   = xᵀ @ dpre           (x = the gathered batch when idx is given;
+                              dx then scatter-adds back into the slab)
 
 all as (M,)-batched dot_generals — the backward is itself two
 block-diagonal GEMMs of the same shape family as the forward, which XLA
@@ -24,12 +36,16 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.padding import INTERPRET, pad_bottom_blocks
-from repro.kernels.splitnn_bottom.kernel import splitnn_bottom_pallas
+from repro.kernels.padding import (GATHER_VMEM_BUDGET, INTERPRET,
+                                   pad_bottom_blocks,
+                                   pad_bottom_blocks_gather, pad_gather_idx,
+                                   round_up)
+from repro.kernels.splitnn_bottom.kernel import (splitnn_bottom_gather_pallas,
+                                                 splitnn_bottom_pallas)
 from repro.kernels.splitnn_bottom.ref import splitnn_bottom_ref
 
 
-def _forward(x, w, b, relu, impl, block_b):
+def _dense_forward(x, w, b, relu, impl, block_b):
     m, n, d = x.shape
     o = w.shape[2]
     xp, wp, bp, bb = pad_bottom_blocks(x, w, b, block_b)
@@ -41,31 +57,65 @@ def _forward(x, w, b, relu, impl, block_b):
     return out[:, :n, :o]
 
 
+def _forward(x, w, b, relu, impl, block_b, idx=None):
+    if idx is None:
+        return _dense_forward(x, w, b, relu, impl, block_b)
+    o = w.shape[2]
+    if impl == "pallas":
+        dp = round_up(x.shape[2], 128)
+        if INTERPRET or x.shape[1] * dp * 4 <= GATHER_VMEM_BUDGET:
+            idx_p, bb, bsz = pad_gather_idx(idx, block_b)
+            xp, wp, bp = pad_bottom_blocks_gather(x, w, b)
+            out = splitnn_bottom_gather_pallas(idx_p, xp, wp, bp, relu=relu,
+                                               block_b=bb,
+                                               interpret=INTERPRET)
+            return out[:, :bsz, :o]
+    # ref oracle (and the past-VMEM-budget fallback): gather, then the
+    # dense pass — the bitwise contract the fused kernel must match
+    return _dense_forward(jnp.take(x, idx, axis=1), w, b, relu, impl,
+                          block_b)
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
 def splitnn_bottom(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
                    relu: bool = True, impl: str = "ref",
-                   block_b: int = 512) -> jnp.ndarray:
+                   block_b: int = 512, idx=None) -> jnp.ndarray:
     """x (M, B, d), w (M, d, o), b (M, o) -> (M, B, o) f32: all M clients'
-    bottom activations ``relu?(x[m] @ w[m] + b[m])`` in one fused pass."""
-    return _forward(x, w, b, relu, impl, block_b)
+    bottom activations ``relu?(x[m] @ w[m] + b[m])`` in one fused pass.
+
+    With ``idx`` (B,) i32, ``x`` is the full (M, N, d) slab and the
+    minibatch gather ``x[:, idx, :]`` fuses into the pass (scalar
+    prefetch on the Pallas impl); the result is (M, B, o) for the
+    gathered rows, bitwise-equal to gathering first.
+    """
+    return _forward(x, w, b, relu, impl, block_b, idx)
 
 
-def _fwd(x, w, b, relu, impl, block_b):
-    out = _forward(x, w, b, relu, impl, block_b)
-    return out, (x, w, out)
+def _fwd(x, w, b, relu, impl, block_b, idx):
+    out = _forward(x, w, b, relu, impl, block_b, idx)
+    return out, (x, w, out, idx)
 
 
 def _bwd(relu, impl, block_b, res, g):
-    x, w, out = res
+    x, w, out, idx = res
     dpre = g * (out > 0) if relu else g                       # (M, B, o)
+    xg = x if idx is None else jnp.take(x, idx, axis=1)       # (M, B, d)
+    xg = xg[..., :w.shape[1]]     # drop pre-padded zero columns (if any)
     dx = jax.lax.dot_general(                                 # (M, B, d)
         dpre, w, (((2,), (2,)), ((0,), (0,))),
         preferred_element_type=jnp.float32)
     dw = jax.lax.dot_general(                                 # (M, d, o)
-        x, dpre, (((1,), (1,)), ((0,), (0,))),
+        xg, dpre, (((1,), (1,)), ((0,), (0,))),
         preferred_element_type=jnp.float32)
     db = jnp.sum(dpre, axis=1)                                # (M, o)
-    return dx, dw, db
+    if idx is None:
+        return dx, dw, db, None
+    # slab cotangent: scatter the gathered-row grads back (duplicate
+    # schedule slots accumulate; the slab may be pre-padded wider than
+    # w — the extra zero columns get zero cotangent).  DCE removes the
+    # scatter when x is data
+    dx_full = jnp.zeros_like(x).at[:, idx, :dx.shape[-1]].add(dx)
+    return dx_full, dw, db, None
 
 
 splitnn_bottom.defvjp(_fwd, _bwd)

@@ -170,6 +170,43 @@ def resolve_batch_mesh(mesh, shard_axis: Optional[str] = None):
     return mesh, axis, n
 
 
+def resolve_train_mesh(mesh, shard_axis: Optional[str] = None):
+    """(mesh, data_axis, n_data, model_axis, n_model) for the VFL train
+    engine (DESIGN.md §8).
+
+    Accepts the 1-D ``("data",)`` meshes of the PSI/CSS paths *and* 2-D
+    ``(data, model)`` train meshes (``launch.mesh.make_train_mesh``):
+
+    - ``data_axis`` shards the per-step batch columns (PR-4 semantics);
+      ``shard_axis`` overrides its name, and a name the mesh doesn't
+      have raises rather than silently running unsharded.
+    - ``model_axis`` — the mesh's ``"model"`` axis when present (and not
+      claimed as the data axis) — shards the M-client bottom axis:
+      per-client weight blocks live on their own devices and the
+      client→server activation send lowers to an all-gather over it.
+
+    ``mesh=None`` or an all-1-sized mesh collapses to
+    ``(None, None, 1, None, 1)`` — the plain single-device path — so the
+    knob is safe to leave on everywhere.
+    """
+    if mesh is None:
+        return None, None, 1, None, 1
+    names = tuple(mesh.axis_names)
+    if shard_axis is not None and shard_axis not in names:
+        raise ValueError(f"shard_axis {shard_axis!r} not in mesh axes "
+                         f"{names}")
+    data_axis = shard_axis or shard_axis_name(mesh)
+    model_axis = "model" if ("model" in names and "model" != data_axis) \
+        else None
+    n_data = mesh_axis_size(mesh, data_axis)
+    n_model = mesh_axis_size(mesh, model_axis) if model_axis else 1
+    if n_model <= 1:
+        model_axis, n_model = None, 1
+    if n_data <= 1 and n_model <= 1:
+        return None, None, 1, None, 1
+    return mesh, data_axis, n_data, model_axis, n_model
+
+
 def mesh_axis_size(mesh, name: str) -> int:
     try:
         return dict(zip(mesh.axis_names, mesh.axis_sizes

@@ -1,4 +1,4 @@
-"""Compiled VFL training engines (paper §3 training stage, DESIGN.md §7).
+"""Compiled VFL training engines (paper §3 training stage, DESIGN.md §7–§8).
 
 Two engines drive the SplitNN runtime (model zoo in
 ``repro.core.splitnn``):
@@ -14,16 +14,30 @@ per step.  Remainder batches are padded to the step shape and masked
 out through the Eq.(2) sample weights (w = 0 rows contribute exactly
 0.0 to every loss sum and gradient), so the last ``n mod bs`` rows
 train instead of being dropped.  The M-client bottom layer runs as one
-block-diagonal slab pass (``kernels/splitnn_bottom``) rather than an
-M-long loop of small GEMMs.
+block-diagonal slab pass (``kernels/splitnn_bottom``); the per-step
+``slab[:, idx, :]`` minibatch gather fuses INTO that pass
+(``fuse_gather=True``, the default): the schedule indices
+scalar-prefetch into the kernel, so the gathered batch never makes a
+separate HBM round trip — bitwise-identical to gathering first.
 
-With ``mesh=`` the per-step batch axis shards over one mesh axis
-(``sharding.spec_shard_map``: carry and data replicated, the padded
-batch columns split).  Each device computes its shard's unnormalized
-loss/grad sums; ``psum`` totals them before the replicated Adam update,
-so results match single-device training up to gemm/psum-reassociation
-ulps (DESIGN.md §5 parity rules — NOT byte-identical, unlike the
-gather-free PSI/CSS shardings).
+With ``mesh=`` the engine shards over a 1-D ``("data",)`` or 2-D
+``(data, model)`` mesh (``sharding.resolve_train_mesh``):
+
+- ``data`` shards the per-step batch columns.  Each device computes its
+  shard's unnormalized loss/grad sums; ``psum`` totals them before the
+  replicated Adam update, so results match single-device training up to
+  gemm/psum-reassociation ulps (DESIGN.md §5 parity rules — NOT
+  byte-identical, unlike the gather-free PSI/CSS shardings).
+- ``model`` shards the M-client bottom axis (DESIGN.md §8): each device
+  owns a contiguous block of client weight slabs (and their Adam
+  moments and feature slabs), computes its clients' activations, and
+  the paper's "clients send activations to the server" step lowers to
+  ONE ``all_gather`` over ``model`` per scan step.  The label-owner
+  loss is computed on model-rank 0 only (other ranks' redundant copies
+  are masked to exactly 0.0 before the psum), which keeps the
+  all-gather's transpose — a psum_scatter handing each device the
+  cotangent for ITS activation block — free of redundancy factors:
+  bottom grads psum over ``data`` only, top grads over both axes.
 
 ``train_loop`` — the legacy host epoch loop (one jit dispatch + one
 blocking sync per minibatch), kept as the parity oracle and timing
@@ -47,7 +61,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.sharding import resolve_batch_mesh, spec_shard_map
+from repro.kernels.padding import round_up
+from repro.sharding import padded_rows, resolve_train_mesh, spec_shard_map
 from repro.train.optimizer import adam_init, adam_update
 
 # ------------------------------------------------------------------ reports
@@ -62,6 +77,8 @@ class EngineStats:
     (the scan engine's contract is exactly one of each per epoch; the
     legacy loop pays one of each per minibatch step).  The one-time
     compile/warm-up dispatch before the timed region is excluded.
+    ``shards``/``model_shards`` are the (data, model) mesh-axis sizes
+    the run sharded over (1 = unsharded).
     """
     dispatches: int = 0
     host_syncs: int = 0
@@ -70,6 +87,8 @@ class EngineStats:
     padded_batch: int = 0
     engine: str = "scan"
     bottom_impl: str = "ref"
+    model_shards: int = 1
+    fused_gather: bool = False
 
 
 @dataclasses.dataclass
@@ -84,50 +103,102 @@ class TrainReport:
     engine_stats: Optional[EngineStats] = None
 
 
-# ------------------------------------------------------------ slab forward
+# ------------------------------------------------------------ slab params
 
 
-def forward_slab(params, cfg, x_slab: jnp.ndarray,
-                 bottom_impl: str = "ref", block_b: int = 512):
-    """SplitNN forward over the packed client slab.
+def pack_slab(features: Sequence[np.ndarray], m_pad: int = 0) -> np.ndarray:
+    """Stack per-client (N, d_m) slices into the (M, N, d_max) slab.
 
-    ``x_slab`` (M, B, d_max) stacks every client's feature slice,
-    zero-padded to the widest client — the block-diagonal bottom layer
-    then runs as ONE fused pass (``kernels/splitnn_bottom``) instead of
-    M small GEMMs.  Zero-padded d columns multiply into padded weight
-    rows that are themselves zero, so activations are exact.  Matches
-    ``splitnn_forward`` on the equivalent per-client slices.
-    """
-    from repro.kernels.splitnn_bottom.ops import splitnn_bottom
-
-    m, bsz, d_max = x_slab.shape
-    ws = [bp["w"] for bp in params["bottoms"]]
-    o = ws[0].shape[1]
-    w = jnp.stack([jnp.pad(wm, ((0, d_max - wm.shape[0]), (0, 0)))
-                   for wm in ws])                                # (M,dmax,o)
-    if "b" in params["bottoms"][0]:
-        b = jnp.stack([bp["b"] for bp in params["bottoms"]])     # (M, o)
-    else:
-        b = jnp.zeros((m, o), jnp.float32)
-    relu = cfg.model == "mlp"
-    acts = splitnn_bottom(x_slab, w, b, relu, bottom_impl, block_b)
-    if cfg.model in ("lr", "linreg"):
-        return jnp.sum(acts, axis=0) + params["top"]["b"]
-    # (M,B,o) -> (B, M*o): same layout as concatenating per-client acts
-    h = jnp.transpose(acts, (1, 0, 2)).reshape(bsz, m * o)
-    h = jax.nn.relu(h @ params["top"]["w1"] + params["top"]["b1"])
-    return h @ params["top"]["w2"] + params["top"]["b2"]
-
-
-def pack_slab(features: Sequence[np.ndarray]) -> np.ndarray:
-    """Stack per-client (N, d_m) slices into the (M, N, d_max) slab."""
+    ``m_pad`` > M appends all-zero dummy clients (the model-axis padding
+    of DESIGN.md §8: their activations are exactly 0 and are sliced off
+    before the top model)."""
     m = len(features)
     n = features[0].shape[0]
     d_max = max(f.shape[1] for f in features)
-    slab = np.zeros((m, n, d_max), np.float32)
+    slab = np.zeros((max(m, m_pad), n, d_max), np.float32)
     for i, f in enumerate(features):
         slab[i, :, :f.shape[1]] = f
     return slab
+
+
+def pack_slab_params(params, d_max: int, m_pad: int = 0):
+    """Model-zoo params → the scan carry's slab form.
+
+    ``{"bw": (Mp, d_max, o), ["bb": (Mp, o)], "top": {...}}`` — the
+    per-client bottom blocks zero-padded to the widest client and
+    stacked (plus ``m_pad - M`` all-zero dummy clients for the model
+    axis), so the bottom carry is ONE shardable leaf instead of a
+    ragged list.  Zero padding is exact: padded d rows multiply
+    zero-padded feature columns and receive zero gradients, so they
+    stay zero through Adam (as do dummy clients, whose activations are
+    sliced off before the top model and therefore see zero cotangent).
+    ``bb`` exists only when the zoo model has bottom biases (mlp) —
+    bias-free models (lr/linreg) use a constant zero inside the
+    forward, exactly like the zoo path, so no phantom bias trains.
+    """
+    ws = [bp["w"] for bp in params["bottoms"]]
+    m = len(ws)
+    mp = max(m, m_pad)
+    o = ws[0].shape[1]
+    w = jnp.zeros((mp, d_max, o), jnp.float32)
+    for i, wm in enumerate(ws):
+        w = w.at[i, :wm.shape[0], :].set(wm.astype(jnp.float32))
+    packed = {"bw": w, "top": params["top"]}
+    if "b" in params["bottoms"][0]:
+        packed["bb"] = jnp.zeros((mp, o), jnp.float32).at[:m, :].set(
+            jnp.stack([bp["b"] for bp in params["bottoms"]]))
+    return packed
+
+
+def unpack_slab_params(packed, feature_dims: Sequence[int]):
+    """Slab-form carry → model-zoo params (exact slices; the inverse of
+    ``pack_slab_params`` for the real clients)."""
+    bottoms = []
+    for i, d in enumerate(feature_dims):
+        bp = {"w": packed["bw"][i, :d, :]}
+        if "bb" in packed:
+            bp["b"] = packed["bb"][i]
+        bottoms.append(bp)
+    return {"bottoms": bottoms, "top": packed["top"]}
+
+
+# ------------------------------------------------------------ slab forward
+
+
+def forward_slab_packed(packed, cfg, m: int, x_slab: jnp.ndarray, *,
+                        bottom_impl: str = "ref", block_b: int = 512,
+                        idx=None, model_axis: Optional[str] = None):
+    """SplitNN forward from slab-form params.
+
+    ``x_slab`` is the local (M_loc, B, d_max) batch slab — or, with
+    ``idx`` (B,) i32, the local FULL (M_loc, N, d_max) slab whose
+    minibatch gather fuses into the bottom pass (scalar prefetch on the
+    pallas impl).  ``model_axis`` names the mesh axis the M-client axis
+    is sharded over: the client→server activation send then lowers to
+    one ``all_gather`` (DESIGN.md §8); padded dummy clients are sliced
+    off before the top model.  Matches ``splitnn_forward`` on the
+    equivalent per-client slices (zero padding is exact).
+    """
+    from repro.kernels.splitnn_bottom.ops import splitnn_bottom
+
+    w = packed["bw"]
+    o = w.shape[2]
+    b = packed.get("bb")
+    if b is None:
+        b = jnp.zeros((w.shape[0], o), jnp.float32)
+    relu = cfg.model == "mlp"
+    acts = splitnn_bottom(x_slab, w, b, relu, bottom_impl, block_b, idx)
+    if model_axis is not None:
+        # §3 "send activations to the server": one collective per step
+        acts = jax.lax.all_gather(acts, model_axis, axis=0, tiled=True)
+    acts = acts[:m]                              # drop dummy-client padding
+    bsz = acts.shape[1]
+    if cfg.model in ("lr", "linreg"):
+        return jnp.sum(acts, axis=0) + packed["top"]["b"]
+    # (M,B,o) -> (B, M*o): same layout as concatenating per-client acts
+    h = jnp.transpose(acts, (1, 0, 2)).reshape(bsz, m * o)
+    h = jax.nn.relu(h @ packed["top"]["w1"] + packed["top"]["b1"])
+    return h @ packed["top"]["w2"] + packed["top"]["b2"]
 
 
 # -------------------------------------------------------------- loss sums
@@ -189,6 +260,7 @@ def train_scan(partition, cfg, *, sample_weights: Optional[np.ndarray] = None,
                bandwidth: float = 10e9 / 8, latency: float = 2e-4,
                mesh=None, shard_axis: Optional[str] = None,
                bottom_impl: str = "ref", block_b: int = 512,
+               fuse_gather: bool = True,
                verbose: bool = False) -> TrainReport:
     """Scan-based mini-batch Adam training to the paper's convergence
     criterion — one dispatch and one host sync per EPOCH.
@@ -196,19 +268,37 @@ def train_scan(partition, cfg, *, sample_weights: Optional[np.ndarray] = None,
     ``bottom_impl``: "ref" (block-diagonal slab oracle, one batched
     GEMM) | "pallas" (fused VMEM-resident kernel) | "loop" (legacy
     per-client matmuls inside the scan, the bitwise-parity oracle for
-    the slab layout).  ``mesh`` shards the per-step batch axis
-    (DESIGN.md §7); results match single-device within reassociation
-    ulps.
+    the slab layout).  ``fuse_gather`` fuses the per-step schedule
+    gather into the slab pass (bitwise-equal to ``False``, which keeps
+    the explicit ``slab[:, idx, :]`` round trip — the parity oracle).
+    ``mesh`` shards the per-step batch axis over ``data`` and, on a 2-D
+    ``(data, model)`` mesh, the M-client bottom axis over ``model``
+    (DESIGN.md §8); results match single-device within reassociation
+    ulps either way.
     """
     from repro.core import splitnn as models
 
     n = partition.n_samples
     m = partition.n_clients
     feature_dims = [f.shape[1] for f in partition.client_features]
-    params = models.init_splitnn(cfg, feature_dims)
-    opt = adam_init(params)
+    d_max = max(feature_dims)
 
-    mesh, axis, n_shards = resolve_batch_mesh(mesh, shard_axis)
+    mesh, data_axis, n_data, model_axis, n_model = resolve_train_mesh(
+        mesh, shard_axis)
+
+    use_slab = bottom_impl in ("ref", "pallas")
+    if n_model > 1 and not use_slab:
+        raise ValueError(
+            "model-axis sharding needs the slab bottom path "
+            "(bottom_impl='ref'|'pallas'), not 'loop'")
+    m_pad = padded_rows(m, n_model)              # dummy clients (§8)
+
+    def fresh_params():
+        zoo = models.init_splitnn(cfg, feature_dims)
+        return pack_slab_params(zoo, d_max, m_pad) if use_slab else zoo
+
+    params = fresh_params()
+    opt = adam_init(params)
 
     y_np = partition.labels
     y_all = jnp.asarray(y_np, jnp.float32 if cfg.n_classes == 0
@@ -217,28 +307,46 @@ def train_scan(partition, cfg, *, sample_weights: Optional[np.ndarray] = None,
             if sample_weights is not None else np.ones(n, np.float32))
     w_eff = jnp.asarray(w_np)
 
-    use_slab = bottom_impl in ("ref", "pallas")
     if use_slab:
-        data: Tuple = (jnp.asarray(pack_slab(partition.client_features)),)
+        slab = pack_slab(partition.client_features, m_pad)
+        if fuse_gather and bottom_impl == "pallas":
+            # align the slab's d to the kernel lane width ONCE, here,
+            # so the per-step gather-fused pass hands the loop-invariant
+            # slab straight to the kernel instead of re-padding it every
+            # scan step (pad_bottom_blocks_gather no-ops on aligned f32;
+            # zero columns meet zero weight rows, values unchanged)
+            dp = round_up(d_max, 128)
+            if dp > d_max:
+                slab = np.concatenate(
+                    [slab, np.zeros(slab.shape[:2] + (dp - d_max,),
+                                    np.float32)], axis=2)
+        data: Tuple = (jnp.asarray(slab),)
     else:
         data = tuple(jnp.asarray(f, jnp.float32)
                      for f in partition.client_features)
-    n_data = len(data)
+    n_data_arrays = len(data)
     arrays = data + (y_all, w_eff)
 
     bs = min(cfg.batch_size, n)
     steps_per_epoch = -(-n // bs)
-    padded_bs = bs + (-bs) % n_shards
+    padded_bs = padded_rows(bs, n_data)
 
-    def batch_forward(p, ib, xs_arrays):
+    def batch_forward(p, ib, xs_arrays, shard_model):
+        maxis = model_axis if shard_model else None
         if use_slab:
-            return forward_slab(p, cfg, xs_arrays[0][:, ib, :],
-                                bottom_impl, block_b)
+            if fuse_gather:
+                return forward_slab_packed(p, cfg, m, xs_arrays[0],
+                                           bottom_impl=bottom_impl,
+                                           block_b=block_b, idx=ib,
+                                           model_axis=maxis)
+            return forward_slab_packed(p, cfg, m, xs_arrays[0][:, ib, :],
+                                       bottom_impl=bottom_impl,
+                                       block_b=block_b, model_axis=maxis)
         return models.splitnn_forward(p, cfg, [x[ib] for x in xs_arrays])
 
     def epoch_body(params, opt, idx, mask, arrays, *, sharded):
-        xs_arrays = arrays[:n_data]
-        y_a, w_a = arrays[n_data], arrays[n_data + 1]
+        xs_arrays = arrays[:n_data_arrays]
+        y_a, w_a = arrays[n_data_arrays], arrays[n_data_arrays + 1]
 
         def body(carry, sched):
             p, o_, acc = carry
@@ -248,17 +356,40 @@ def train_scan(partition, cfg, *, sample_weights: Optional[np.ndarray] = None,
             if not sharded:
                 loss, grads = jax.value_and_grad(
                     lambda pp: models._loss_from_out(
-                        batch_forward(pp, ib, xs_arrays), cfg, y, w))(p)
+                        batch_forward(pp, ib, xs_arrays, False),
+                        cfg, y, w))(p)
             else:
                 def s_fn(pp):
-                    out = batch_forward(pp, ib, xs_arrays)
+                    out = batch_forward(pp, ib, xs_arrays,
+                                        model_axis is not None)
                     s, wsum = _loss_sums(out, cfg, y, w)
+                    if model_axis is not None:
+                        # the label owner lives on model-rank 0: the
+                        # other ranks' redundant copies mask to exactly
+                        # 0.0, so the all-gather transpose (psum_scatter)
+                        # carries no redundancy factor
+                        keep = (jax.lax.axis_index(model_axis) == 0
+                                ).astype(jnp.float32)
+                        s, wsum = s * keep, wsum * keep
                     return s, wsum
                 (s, wsum), g = jax.value_and_grad(s_fn, has_aux=True)(p)
-                s = jax.lax.psum(s, axis)
-                wtot = jnp.maximum(jax.lax.psum(wsum, axis), 1e-12)
-                grads = jax.tree_util.tree_map(
-                    lambda t: jax.lax.psum(t, axis) / wtot, g)
+                axes = (data_axis,) if model_axis is None else (
+                    data_axis, model_axis)
+                s = jax.lax.psum(s, axes)
+                wtot = jnp.maximum(jax.lax.psum(wsum, axes), 1e-12)
+                if model_axis is None:
+                    grads = jax.tree_util.tree_map(
+                        lambda t: jax.lax.psum(t, axes) / wtot, g)
+                else:
+                    # bottom blocks are device-resident: their grads
+                    # arrive via the all-gather transpose already summed
+                    # over model, so they psum over data ONLY; top
+                    # params are replicated, their grads (nonzero on
+                    # rank 0's rows only) psum over both axes
+                    grads = {k: jax.lax.psum(v, data_axis) / wtot
+                             for k, v in g.items() if k != "top"}
+                    grads["top"] = jax.tree_util.tree_map(
+                        lambda t: jax.lax.psum(t, axes) / wtot, g["top"])
                 loss = s / wtot
             p, o_ = adam_update(p, grads, o_, lr=cfg.lr)
             return (p, o_, acc + loss), None
@@ -268,36 +399,63 @@ def train_scan(partition, cfg, *, sample_weights: Optional[np.ndarray] = None,
         return params, opt, acc / steps_per_epoch
 
     if mesh is not None:
+        def leaf_specs(tree, shard_clients: bool):
+            def one(leaf):
+                if shard_clients and model_axis is not None:
+                    return P(*([model_axis]
+                               + [None] * (jnp.ndim(leaf) - 1)))
+                return P()
+            return jax.tree_util.tree_map(one, tree)
+
+        if use_slab and model_axis is not None:
+            pspec = dict(leaf_specs(
+                {k: v for k, v in params.items() if k != "top"}, True))
+            pspec["top"] = leaf_specs(params["top"], False)
+            data_specs = (P(model_axis),)
+        else:
+            pspec = leaf_specs(params, False)
+            data_specs = (P(),) * n_data_arrays
+        ospec = type(opt)(step=P(), mu=pspec, nu=pspec)
+        in_specs = (pspec, ospec, P(None, data_axis), P(None, data_axis)) \
+            + data_specs + (P(), P())
+        out_specs = (pspec, ospec, P())
+
         def fn(params, opt, idx, mask, *arrays):
             return epoch_body(params, opt, idx, mask, arrays, sharded=True)
-        in_specs = (P(), P(), P(None, axis), P(None, axis)) + \
-            (P(),) * len(arrays)
-        fn = spec_shard_map(fn, mesh, in_specs, (P(), P(), P()))
-        pin = lambda t: jax.device_put(t, NamedSharding(mesh, P()))
+        fn = spec_shard_map(fn, mesh, in_specs, out_specs)
+
+        def pin_tree(tree, spec_tree):
+            return jax.tree_util.tree_map(
+                lambda t, s: jax.device_put(t, NamedSharding(mesh, s)),
+                tree, spec_tree)
+        pin_carry = lambda p, o: (pin_tree(p, pspec), pin_tree(o, ospec))
+        arrays = tuple(pin_tree(a, s)
+                       for a, s in zip(arrays, data_specs + (P(), P())))
     else:
         def fn(params, opt, idx, mask, *arrays):
             return epoch_body(params, opt, idx, mask, arrays, sharded=False)
-        pin = jax.device_put
+        pin_carry = lambda p, o: (jax.device_put(p), jax.device_put(o))
+        arrays = tuple(jax.device_put(a) for a in arrays)
 
     jitted = jax.jit(fn, donate_argnums=(0, 1))
-    arrays = tuple(pin(a) for a in arrays)
 
     # compile + warm up OUTSIDE the timed region (the warm-up consumes
     # the donated carry, so re-init to the identical seeded state), then
-    # keep every timed call signature-stable: committed replicated carry
-    # in, committed replicated carry out — no mid-loop recompiles.
+    # keep every timed call signature-stable: committed carry in,
+    # committed carry out — no mid-loop recompiles.
     idx0, mask0 = epoch_schedule(np.arange(n), n, bs, steps_per_epoch,
                                  padded_bs)
-    params, opt = pin(params), pin(opt)
+    params, opt = pin_carry(params, opt)
     jax.block_until_ready(jitted(params, opt, idx0, mask0, *arrays))
-    params = pin(models.init_splitnn(cfg, feature_dims))
-    opt = pin(adam_init(params))
+    params = fresh_params()
+    params, opt = pin_carry(params, adam_init(params))
 
     rng = np.random.default_rng(cfg.seed)
     per_sample = models.activation_bytes_per_sample(cfg, m)
-    stats = EngineStats(shards=n_shards, steps_per_epoch=steps_per_epoch,
+    stats = EngineStats(shards=n_data, steps_per_epoch=steps_per_epoch,
                         padded_batch=padded_bs, engine="scan",
-                        bottom_impl=bottom_impl)
+                        bottom_impl=bottom_impl, model_shards=n_model,
+                        fused_gather=use_slab and fuse_gather)
     losses: List[float] = []
     comm_bytes = 0
     total_steps = 0
@@ -320,9 +478,11 @@ def train_scan(partition, cfg, *, sample_weights: Optional[np.ndarray] = None,
                 break
     train_seconds = time.perf_counter() - t0
     sim_comm = comm_bytes / bandwidth + latency * 2 * total_steps * m
+    out_params = (unpack_slab_params(params, feature_dims) if use_slab
+                  else params)
     return TrainReport(losses=losses, epochs=epoch, steps=total_steps,
                        train_seconds=train_seconds, comm_bytes=comm_bytes,
-                       simulated_comm_seconds=sim_comm, params=params,
+                       simulated_comm_seconds=sim_comm, params=out_params,
                        engine_stats=stats)
 
 

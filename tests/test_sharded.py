@@ -16,7 +16,7 @@ from repro.core.mpsi import MPSI
 from repro.core.treecss import run_pipeline
 from repro.core.splitnn import SplitNNConfig
 from repro.data.synthetic import make_id_universe
-from repro.launch.mesh import make_data_mesh
+from repro.launch.mesh import make_data_mesh, make_train_mesh
 from repro.psi import engine
 
 needs_devices = pytest.mark.skipif(
@@ -24,10 +24,20 @@ needs_devices = pytest.mark.skipif(
     reason="needs >=2 devices "
            "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
 
+needs_8_devices = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs >=8 devices for the 2x4 (data, model) mesh "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
 
 @pytest.fixture(scope="module")
 def mesh():
     return make_data_mesh()
+
+
+@pytest.fixture(scope="module")
+def mesh2d():
+    return make_train_mesh(2, 4)
 
 
 def _pair_batch(npairs, base_n, seed):
@@ -169,6 +179,137 @@ def test_train_sharded_mlp(mesh):
     shrd = train_splitnn(tr, cfg, mesh=mesh)
     assert shrd.engine_stats.shards == len(jax.devices())
     assert np.allclose(base.losses, shrd.losses, rtol=1e-4, atol=1e-6)
+
+
+# ----------------------------------------------------------- 2-D train mesh
+
+
+def _flat(params):
+    return np.concatenate([np.asarray(x).ravel()
+                           for x in jax.tree_util.tree_leaves(params)])
+
+
+@needs_8_devices
+@pytest.mark.parametrize("batch_size", [64, 60])   # divisible + padded
+def test_train_2d_mesh_matches_single_device(mesh2d, batch_size):
+    """Client-axis model parallelism (DESIGN.md §8): the M=3 bottom
+    blocks shard over a 4-way model axis (one dummy client pads), the
+    activation send lowers to an all-gather, and the result matches
+    single-device AND the 1-D data-only mesh within reassociation ulps.
+    The dispatch/sync contract survives the 2-D mapping: still exactly
+    ONE of each per epoch."""
+    from repro.core.splitnn import SplitNNConfig as Cfg, evaluate, \
+        train_splitnn
+
+    tr = make_cls_partition(n=420, d=12, seed=6)
+    te = make_cls_partition(n=200, d=12, seed=6)
+    cfg = Cfg(model="lr", n_classes=2, lr=0.05, batch_size=batch_size,
+              max_epochs=8)
+    base = train_splitnn(tr, cfg)
+    m1d = train_splitnn(tr, cfg, mesh=make_data_mesh())
+    m2d = train_splitnn(tr, cfg, mesh=mesh2d)
+    st = m2d.engine_stats
+    assert st.shards == 2 and st.model_shards == 4
+    assert st.dispatches == m2d.epochs and st.host_syncs == m2d.epochs
+    assert np.allclose(base.losses, m2d.losses, rtol=1e-4, atol=1e-6)
+    assert np.allclose(m1d.losses, m2d.losses, rtol=1e-4, atol=1e-6)
+    assert m2d.steps == base.steps
+    assert m2d.comm_bytes == base.comm_bytes   # modeled traffic invariant
+    assert abs(evaluate(base.params, cfg, te)
+               - evaluate(m2d.params, cfg, te)) <= 0.02
+
+
+@needs_8_devices
+@pytest.mark.parametrize("bottom_impl", ["ref", "pallas"])
+def test_train_2d_mesh_mlp(mesh2d, bottom_impl):
+    """MLP on the 2-D mesh — the all-gather feeds the real (concat) top
+    model — with both bottom impls, gather fusion on (the default)."""
+    from repro.core.splitnn import SplitNNConfig as Cfg, train_splitnn
+
+    tr = make_cls_partition(n=256, d=12, classes=4, seed=7)
+    cfg = Cfg(model="mlp", n_classes=4, lr=0.01, batch_size=64,
+              max_epochs=5)
+    base = train_splitnn(tr, cfg)
+    shrd = train_splitnn(tr, cfg, mesh=mesh2d, bottom_impl=bottom_impl)
+    assert shrd.engine_stats.model_shards == 4
+    assert shrd.engine_stats.fused_gather
+    assert np.allclose(base.losses, shrd.losses, rtol=1e-4, atol=1e-6)
+
+
+@needs_8_devices
+def test_train_2d_gather_fused_bitwise(mesh2d):
+    """On the SAME 2-D mesh, fusing the schedule gather into the bottom
+    kernel changes no value: losses and trained params are bitwise-equal
+    to the explicit slab[:, idx, :] path (full AND remainder batches)."""
+    from repro.core.splitnn import SplitNNConfig as Cfg, train_splitnn
+
+    for n in (256, 230):                       # divisible + remainder
+        tr = make_cls_partition(n=n, d=11, seed=9)
+        cfg = Cfg(model="lr", n_classes=2, lr=0.05, batch_size=64,
+                  max_epochs=4)
+        fused = train_splitnn(tr, cfg, mesh=mesh2d, bottom_impl="pallas")
+        plain = train_splitnn(tr, cfg, mesh=mesh2d, bottom_impl="pallas",
+                              fuse_gather=False)
+        assert fused.engine_stats.fused_gather
+        assert not plain.engine_stats.fused_gather
+        assert fused.losses == plain.losses
+        assert np.array_equal(_flat(fused.params), _flat(plain.params))
+
+
+@needs_8_devices
+def test_train_2d_requires_slab_path(mesh2d):
+    """bottom_impl='loop' keeps ragged per-client params — it cannot map
+    onto the model axis and must raise, not silently run unsharded."""
+    from repro.core.splitnn import SplitNNConfig as Cfg, train_splitnn
+
+    tr = make_cls_partition(n=128, d=9, seed=1)
+    cfg = Cfg(model="lr", n_classes=2, lr=0.05, batch_size=64,
+              max_epochs=2)
+    with pytest.raises(ValueError, match="model-axis"):
+        train_splitnn(tr, cfg, mesh=mesh2d, bottom_impl="loop")
+
+
+@needs_8_devices
+def test_pipeline_2d_mesh_end_to_end(mesh2d):
+    """One 2-D mesh knob through run_pipeline: PSI/CSS shard over data
+    (byte-identical, model axis replicated), training shards over both
+    axes (documented float tolerance)."""
+    full = make_cls_partition(n=640, d=12, seed=3)
+    rows = np.random.default_rng(2).permutation(640)
+    tr, te = full.take(rows[:480]), full.take(rows[480:])
+    cfg = SplitNNConfig(model="lr", n_classes=2, lr=0.05, batch_size=64,
+                        max_epochs=15)
+    base = run_pipeline(tr, te, cfg, variant="treecss",
+                        clusters_per_client=4, seed=0)
+    shrd = run_pipeline(tr, te, cfg, variant="treecss",
+                        clusters_per_client=4, seed=0, mesh=mesh2d)
+    assert np.array_equal(shrd.coreset.indices, base.coreset.indices)
+    assert np.array_equal(shrd.coreset.weights, base.coreset.weights)
+    assert shrd.train.engine_stats.shards == 2
+    assert shrd.train.engine_stats.model_shards == 4
+    assert shrd.train.epochs == base.train.epochs
+    assert np.allclose(base.train.losses, shrd.train.losses,
+                       rtol=1e-4, atol=1e-6)
+    assert abs(shrd.metric - base.metric) <= 0.03
+
+
+def test_resolve_train_mesh_shapes():
+    """1-D meshes keep the PR-4 data-only semantics; 2-D meshes expose
+    the model axis; 1-sized axes collapse; typos raise."""
+    from repro.sharding import resolve_train_mesh
+
+    assert resolve_train_mesh(None) == (None, None, 1, None, 1)
+    m1 = make_data_mesh(1)
+    assert resolve_train_mesh(m1) == (None, None, 1, None, 1)
+    with pytest.raises(ValueError, match="shard_axis"):
+        resolve_train_mesh(m1, "dat")
+    if len(jax.devices()) >= 8:
+        m2 = make_train_mesh(2, 4)
+        mesh, da, nd, ma, nm = resolve_train_mesh(m2)
+        assert (da, nd, ma, nm) == ("data", 2, "model", 4)
+        m1d = make_data_mesh()
+        mesh, da, nd, ma, nm = resolve_train_mesh(m1d)
+        assert (da, nd, ma, nm) == ("data", len(jax.devices()), None, 1)
 
 
 # ------------------------------------------------------------- end to end

@@ -80,6 +80,71 @@ def test_custom_vjp_matches_autodiff(impl, relu):
                            rtol=1e-5, atol=1e-6)
 
 
+# ------------------------------------------------- scalar-prefetch gather
+
+
+@pytest.mark.parametrize("relu", [True, False])
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+@pytest.mark.parametrize("bsz", [12, 70, 130])     # one-tile + multi-tile
+def test_gather_fused_matches_gather_then_dense(relu, impl, bsz):
+    """splitnn_bottom(x, ..., idx=) over the full slab must be bitwise-
+    equal to gathering slab[:, idx, :] first and running the dense pass
+    — including duplicate schedule slots (the remainder batch points
+    every pad slot at row 0)."""
+    rng = np.random.default_rng(bsz)
+    x, w, bias = _case(m=3, b=40, d=9, o=6, seed=bsz)   # b here is N rows
+    idx = jnp.asarray(rng.integers(0, 40, bsz).astype(np.int32))
+    idx = idx.at[-3:].set(0)                            # forced duplicates
+    fused = splitnn_bottom(x, w, bias, relu, impl, 64, idx)
+    dense = splitnn_bottom(x[:, idx, :], w, bias, relu, impl, 64)
+    assert fused.shape == (3, bsz, 6)
+    assert np.array_equal(np.asarray(fused), np.asarray(dense))
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_gather_fused_param_grads_bitwise(impl):
+    """The fused path routes through the same backward as the dense
+    path, so the w/b gradients training actually consumes are bitwise-
+    equal to gathering first."""
+    rng = np.random.default_rng(3)
+    x, w, bias = _case(m=3, b=50, d=7, o=5, seed=13)
+    idx = jnp.asarray(rng.integers(0, 50, 24).astype(np.int32))
+
+    def fused(w, bias):
+        return jnp.sum(splitnn_bottom(x, w, bias, True, impl, 512, idx) ** 2)
+
+    def dense(w, bias):
+        xg = x[:, idx, :]
+        return jnp.sum(splitnn_bottom(xg, w, bias, True, impl, 512) ** 2)
+
+    gf = jax.grad(fused, argnums=(0, 1))(w, bias)
+    gd = jax.grad(dense, argnums=(0, 1))(w, bias)
+    for a, b in zip(gf, gd):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_gather_fused_slab_grad_scatters():
+    """The slab cotangent scatter-adds the gathered-row grads back into
+    the full (M, N, d) layout — duplicates accumulate — matching
+    autodiff through the explicit take."""
+    rng = np.random.default_rng(5)
+    x, w, bias = _case(m=2, b=30, d=6, o=4, seed=21)
+    idx = jnp.asarray(rng.integers(0, 30, 16).astype(np.int32))
+    idx = idx.at[:4].set(idx[0])                        # heavy duplicates
+
+    def fused(x):
+        return jnp.sum(splitnn_bottom(x, w, bias, True, "ref", 512, idx) ** 2)
+
+    def taken(x):
+        return jnp.sum(splitnn_bottom(x[:, idx, :], w, bias, True,
+                                      "ref", 512) ** 2)
+
+    gf = jax.grad(fused)(x)
+    gt = jax.grad(taken)(x)
+    assert gf.shape == x.shape
+    assert np.allclose(np.asarray(gf), np.asarray(gt), rtol=1e-6, atol=1e-6)
+
+
 def test_impls_share_one_backward():
     """ref and pallas route through the same custom_vjp backward, so
     their gradients cannot diverge — bitwise."""

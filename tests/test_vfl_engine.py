@@ -75,6 +75,37 @@ def test_linreg_scan_matches_loop():
     assert np.allclose(loop.losses, scan.losses, rtol=1e-4, atol=1e-6)
 
 
+@pytest.mark.parametrize("bottom_impl", ["ref", "pallas"])
+@pytest.mark.parametrize("n", [192, 230])          # divisible + remainder
+def test_fuse_gather_is_bitwise(n, bottom_impl):
+    """Scalar-prefetching the schedule indices into the bottom pass
+    (DESIGN.md §8) is a pure data-movement change: losses and trained
+    params must be BITWISE-equal to the explicit slab[:, idx, :] gather,
+    on full and remainder batches, for both bottom impls."""
+    tr = make_cls_partition(n=n, d=11, seed=8)
+    cfg = SplitNNConfig(model="lr", n_classes=2, lr=0.05, batch_size=64,
+                        max_epochs=5)
+    fused = train_splitnn(tr, cfg, bottom_impl=bottom_impl)
+    plain = train_splitnn(tr, cfg, bottom_impl=bottom_impl,
+                          fuse_gather=False)
+    assert fused.engine_stats.fused_gather
+    assert not plain.engine_stats.fused_gather
+    assert fused.losses == plain.losses
+    assert np.array_equal(_flat(fused.params), _flat(plain.params))
+
+
+def test_fuse_gather_mlp_bitwise():
+    """Same contract through the MLP top model (bottom biases in the
+    slab carry, ReLU mask through the shared custom_vjp backward)."""
+    tr = make_cls_partition(n=200, d=12, classes=4, seed=9)
+    cfg = SplitNNConfig(model="mlp", n_classes=4, lr=0.01, batch_size=64,
+                        max_epochs=4)
+    fused = train_splitnn(tr, cfg, bottom_impl="pallas")
+    plain = train_splitnn(tr, cfg, bottom_impl="pallas", fuse_gather=False)
+    assert fused.losses == plain.losses
+    assert np.array_equal(_flat(fused.params), _flat(plain.params))
+
+
 # ------------------------------------------------------- dispatch contract
 
 def test_scan_one_dispatch_and_sync_per_epoch():
