@@ -28,10 +28,19 @@ import os
 import sys
 
 DEFAULT_CSV = os.path.join("experiments", "bench", "table2_e2e.csv")
+DEFAULT_SERVE_CSV = os.path.join("experiments", "bench",
+                                 "serve_vfl_smoke.csv")
 DEFAULT_CONTRACT = os.path.join("experiments", "bench",
                                 "engine_contract.json")
 
 KEY = ("dataset", "model", "variant")
+
+# serving-engine smoke rows (benchmarks.serve_vfl.run_smoke): the
+# scheduler's counters are a pure function of (trace, slots, policy,
+# service model) — params never enter — so they pin exactly
+SERVE_KEY = ("policy", "load_frac")
+SERVE_FIELDS = ("dispatches", "admitted_rows", "padded_slots",
+                "occupancy_sum", "completed", "forced_splits")
 
 
 def _ratio(total: int, epochs: int) -> float:
@@ -60,13 +69,20 @@ def load_rows(csv_path: str) -> dict:
     return rows
 
 
-def check(csv_path: str = DEFAULT_CSV,
-          contract_path: str = DEFAULT_CONTRACT) -> int:
-    with open(contract_path) as f:
-        contract = {tuple(r[k] for k in KEY): r["counters"]
-                    for r in json.load(f)["rows"]}
-    got = load_rows(csv_path)
-    failures = []
+def serve_row_counters(row: dict) -> dict:
+    """The contract-relevant counters of one serve_vfl_smoke.csv row."""
+    return {f: int(row[f]) for f in SERVE_FIELDS}
+
+
+def load_serve_rows(csv_path: str) -> dict:
+    rows = {}
+    with open(csv_path) as f:
+        for row in csv.DictReader(f):
+            rows[tuple(row[k] for k in SERVE_KEY)] = serve_row_counters(row)
+    return rows
+
+
+def _diff(contract: dict, got: dict, csv_path: str, failures: list) -> None:
     for key, expect in contract.items():
         if key not in got:
             failures.append(f"{key}: row missing from {csv_path}")
@@ -80,30 +96,66 @@ def check(csv_path: str = DEFAULT_CSV,
         if key not in contract:
             failures.append(f"{key}: row not covered by the contract — "
                             f"regenerate with --write if intended")
+
+
+def check(csv_path: str = DEFAULT_CSV,
+          contract_path: str = DEFAULT_CONTRACT,
+          serve_csv_path: str = DEFAULT_SERVE_CSV) -> int:
+    with open(contract_path) as f:
+        doc = json.load(f)
+    contract = {tuple(r[k] for k in KEY): r["counters"]
+                for r in doc["rows"]}
+    failures = []
+    _diff(contract, load_rows(csv_path), csv_path, failures)
+    serve_contract = {tuple(r[k] for k in SERVE_KEY): r["counters"]
+                      for r in doc.get("serve_rows", [])}
+    n_serve = len(serve_contract)
+    if serve_contract:
+        if not os.path.exists(serve_csv_path):
+            failures.append(
+                f"serve rows pinned but {serve_csv_path} missing — run "
+                f"benchmarks.serve_vfl.run_smoke() before the gate")
+        else:
+            _diff(serve_contract, load_serve_rows(serve_csv_path),
+                  serve_csv_path, failures)
     if failures:
         print(f"ENGINE CONTRACT VIOLATED ({len(failures)} finding(s)):")
         for f_ in failures:
             print(f"  - {f_}")
         return 1
-    print(f"engine contract OK: {len(contract)} row(s) match "
-          f"{contract_path}")
+    print(f"engine contract OK: {len(contract)} train + {n_serve} serve "
+          f"row(s) match {contract_path}")
     return 0
 
 
 def write(csv_path: str = DEFAULT_CSV,
-          contract_path: str = DEFAULT_CONTRACT) -> int:
+          contract_path: str = DEFAULT_CONTRACT,
+          serve_csv_path: str = DEFAULT_SERVE_CSV) -> int:
     rows = [{**dict(zip(KEY, key)), "counters": counters}
             for key, counters in sorted(load_rows(csv_path).items())]
+    doc = {
+        "source": "benchmarks.table2_framework.run_e2e(smoke=True)",
+        "note": "execution-count invariants only (no wall times); "
+                "regenerate with `python -m benchmarks.check_contract "
+                "--write` after an intentional engine change",
+        "rows": rows,
+    }
+    n_serve = 0
+    if os.path.exists(serve_csv_path):
+        serve_rows = [{**dict(zip(SERVE_KEY, key)), "counters": counters}
+                      for key, counters
+                      in sorted(load_serve_rows(serve_csv_path).items())]
+        doc["serve_source"] = "benchmarks.serve_vfl.run_smoke()"
+        doc["serve_rows"] = serve_rows
+        n_serve = len(serve_rows)
+    else:
+        print(f"note: {serve_csv_path} missing — writing contract "
+              f"WITHOUT serve rows")
     with open(contract_path, "w") as f:
-        json.dump({
-            "source": "benchmarks.table2_framework.run_e2e(smoke=True)",
-            "note": "execution-count invariants only (no wall times); "
-                    "regenerate with `python -m benchmarks.check_contract "
-                    "--write` after an intentional engine change",
-            "rows": rows,
-        }, f, indent=2)
+        json.dump(doc, f, indent=2)
         f.write("\n")
-    print(f"wrote {len(rows)} contract row(s) -> {contract_path}")
+    print(f"wrote {len(rows)} train + {n_serve} serve contract row(s) "
+          f"-> {contract_path}")
     return 0
 
 
@@ -111,12 +163,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--csv", default=DEFAULT_CSV)
     ap.add_argument("--contract", default=DEFAULT_CONTRACT)
+    ap.add_argument("--serve-csv", default=DEFAULT_SERVE_CSV)
     ap.add_argument("--write", action="store_true",
-                    help="regenerate the contract from the CSV instead "
-                         "of checking against it")
+                    help="regenerate the contract from the CSVs instead "
+                         "of checking against them")
     args = ap.parse_args()
     fn = write if args.write else check
-    sys.exit(fn(args.csv, args.contract))
+    sys.exit(fn(args.csv, args.contract, args.serve_csv))
 
 
 if __name__ == "__main__":

@@ -20,13 +20,14 @@ def main() -> None:
                     help="paper-scale sizes (hours); default quick sizes")
     ap.add_argument("--only", default="",
                     help="comma-list: fig7,table2,table2e2e,fig45,fig6,"
-                         "roofline")
+                         "serve,roofline")
     args = ap.parse_args()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (beyond_minibatch, fig6_coreset, fig7_mpsi,
-                            fig45_ablation, roofline, table2_framework)
+                            fig45_ablation, roofline, serve_vfl,
+                            table2_framework)
     jobs = [
         ("fig7", fig7_mpsi.run),          # Fig 7 a/b/c: MPSI comparison
         ("table2", table2_framework.run),  # Table 2: framework end-to-end
@@ -34,6 +35,7 @@ def main() -> None:
         ("fig45", fig45_ablation.run),     # Figs 4&5: clusters + weighting
         ("fig6", fig6_coreset.run),        # Fig 6: vs V-coreset
         ("beyond", beyond_minibatch.run),  # beyond-paper: minibatch CSS
+        ("serve", serve_vfl.run),          # serving: p50/p99 vs load
         ("roofline", roofline.run),        # §Roofline report (dry-run JSONs)
     ]
     t00 = time.perf_counter()

@@ -1,0 +1,156 @@
+"""VFL serving benchmark: p50/p99 latency vs offered load for the
+continuous-batching scoring engine (``repro.serve.vfl``) against the
+full-batch-blocking baseline — the "millions of users, heavy traffic"
+artifact of the ROADMAP.
+
+A SplitNN trains with the scan engine, its ``TrainReport.params`` hand
+off to ``VFLScoringEngine`` (the shared ``pack_slab_params`` layout),
+and synthetic open-loop Poisson arrivals (seeded — the trace is a pure
+function of the knobs) stream aligned test rows through
+``simulate_trace`` under both dispatch policies on a virtual clock with
+a FIXED per-dispatch service time.  Fixed service time makes every
+scheduling decision, counter, and latency percentile deterministic —
+that is what lets ``engine_contract.json`` pin the smoke rows — while
+each dispatch still executes the real compiled slab forward (measured
+wall time is reported alongside as ``wall_s``).
+
+``run``   — load sweep (fractions of slot capacity) → serve_vfl.csv
+``run_smoke`` — fixed 2-load × 2-policy trace for CI → serve_vfl_smoke.csv,
+            asserting the headline property: at partial load the
+            continuous policy beats blocking on p99 latency.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from benchmarks.common import dataset_partitions, emit, fmt
+from repro.core.splitnn import SplitNNConfig, train_splitnn
+from repro.data.vertical import VerticalPartition
+from repro.serve.vfl import (ScoreRequest, VFLScoringEngine, simulate_trace)
+
+# fixed virtual per-dispatch service time: ~the interpreter-mode slab
+# forward at these shapes; the exact value only scales the time axis
+SERVICE_S = 2e-3
+ROWS_LO, ROWS_HI = 1, 4        # rows per request (uniform)
+
+
+def make_trace(partition: VerticalPartition, *, n_requests: int,
+               offered_rows_s: float, seed: int = 0
+               ) -> List[ScoreRequest]:
+    """Open-loop Poisson arrivals at ``offered_rows_s`` rows/second:
+    request interarrivals are exponential at the matching request rate,
+    rows per request uniform in [ROWS_LO, ROWS_HI], features drawn from
+    the aligned partition.  Deterministic in (knobs, seed)."""
+    rng = np.random.default_rng(seed)
+    n = partition.n_samples
+    mean_rows = (ROWS_LO + ROWS_HI) / 2.0
+    lam_req = offered_rows_s / mean_rows
+    t, trace = 0.0, []
+    for rid in range(n_requests):
+        t += float(rng.exponential(1.0 / lam_req))
+        rows = int(rng.integers(ROWS_LO, ROWS_HI + 1))
+        idx = rng.integers(0, n, size=rows)
+        trace.append(ScoreRequest(
+            rid=rid, arrival=t,
+            features=[f[idx] for f in partition.client_features]))
+    return trace
+
+
+def _setup(n: int, max_epochs: int, bottom_impl: str):
+    tr, te = dataset_partitions("BA", quick=True, n_override=n)
+    cfg = SplitNNConfig(model="mlp", n_classes=2, lr=0.01,
+                        batch_size=max(8, tr.n_samples // 10),
+                        max_epochs=max_epochs)
+    report = train_splitnn(tr, cfg, bottom_impl=bottom_impl)
+    return report, cfg, te
+
+
+def _sweep(report, cfg, part, *, slots: int, n_requests: int,
+           load_fracs: Sequence[float], bottom_impl: str, seed: int = 0
+           ) -> List[dict]:
+    capacity = slots / SERVICE_S                   # rows/s at full batches
+    rows = []
+    for frac in load_fracs:
+        load = frac * capacity
+        trace = make_trace(part, n_requests=n_requests,
+                           offered_rows_s=load, seed=seed)
+        outputs = {}
+        for policy in ("continuous", "blocking"):
+            eng = VFLScoringEngine(report.params, cfg, slots=slots,
+                                   bottom_impl=bottom_impl)
+            sim = simulate_trace(eng, trace, policy=policy,
+                                 service_seconds=SERVICE_S)
+            outputs[policy] = sim.results
+            st = sim.stats
+            assert st.completed == n_requests, (policy, st)
+            rows.append({
+                "policy": policy,
+                "offered_rows_s": fmt(load, 1),
+                "load_frac": fmt(frac, 2),
+                "slots": slots,
+                "n_requests": n_requests,
+                "p50_ms": fmt(sim.percentile(50) * 1e3, 3),
+                "p99_ms": fmt(sim.percentile(99) * 1e3, 3),
+                "mean_ms": fmt(float(np.mean(list(
+                    sim.latencies.values()))) * 1e3, 3),
+                "makespan_s": fmt(sim.makespan, 4),
+                "throughput_rows_s": fmt(
+                    st.admitted_rows / max(sim.makespan, 1e-12), 1),
+                "dispatches": st.dispatches,
+                "admitted_rows": st.admitted_rows,
+                "padded_slots": st.padded_slots,
+                "occupancy_sum": st.occupancy_sum,
+                "mean_occupancy": fmt(st.mean_occupancy, 3),
+                "completed": st.completed,
+                "forced_splits": st.forced_splits,
+                "wall_s": fmt(sim.wall_seconds, 3),
+            })
+        # the policies change WHEN rows are scored, never WHAT they score
+        assert all(np.array_equal(outputs["continuous"][r],
+                                  outputs["blocking"][r])
+                   for r in outputs["continuous"]), "policy outputs diverge"
+    return rows
+
+
+def run(quick: bool = True, bottom_impl: str = "ref"):
+    """Latency/throughput sweep: p50/p99 vs offered load, both policies."""
+    report, cfg, te = _setup(n=600 if quick else 4000,
+                             max_epochs=5 if quick else 30,
+                             bottom_impl=bottom_impl)
+    rows = _sweep(report, cfg, te, slots=16,
+                  n_requests=300 if quick else 3000,
+                  load_fracs=(0.1, 0.25, 0.5, 0.8, 1.2),
+                  bottom_impl=bottom_impl)
+    emit(rows, "serve_vfl")
+    for frac in ("0.10", "0.25", "0.50"):
+        pair = {r["policy"]: r for r in rows if r["load_frac"] == frac}
+        if pair:
+            print(f"  load {frac}: p99 continuous {pair['continuous']['p99_ms']}ms"
+                  f" vs blocking {pair['blocking']['p99_ms']}ms")
+    return rows
+
+
+def run_smoke():
+    """CI smoke: a fixed request trace (2 loads × 2 policies) whose
+    counters ``engine_contract.json`` pins, plus the headline assert —
+    continuous batching beats full-batch blocking on p99 tail latency
+    at partial load."""
+    report, cfg, te = _setup(n=200, max_epochs=2, bottom_impl="ref")
+    rows = _sweep(report, cfg, te, slots=8, n_requests=120,
+                  load_fracs=(0.25, 1.2), bottom_impl="ref")
+    emit(rows, "serve_vfl_smoke")
+    partial = {r["policy"]: r for r in rows if r["load_frac"] == "0.25"}
+    p99_c = float(partial["continuous"]["p99_ms"])
+    p99_b = float(partial["blocking"]["p99_ms"])
+    assert p99_c < p99_b, (
+        f"continuous p99 {p99_c}ms not below blocking {p99_b}ms at "
+        f"partial load")
+    print(f"smoke OK: partial-load p99 {p99_c}ms (continuous) < "
+          f"{p99_b}ms (blocking)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -194,10 +194,22 @@ def train_splitnn(partition: VerticalPartition, cfg: SplitNNConfig, *,
 
 # ---------------------------------------------------------------- evaluation
 
-def predict(params, cfg: SplitNNConfig, partition: VerticalPartition
-            ) -> np.ndarray:
-    xs = [jnp.asarray(f, jnp.float32) for f in partition.client_features]
-    out = np.asarray(splitnn_forward(params, cfg, xs))
+def predict(params, cfg: SplitNNConfig, partition: VerticalPartition, *,
+            block_b: int = 512, bottom_impl: str = "ref") -> np.ndarray:
+    """Batched prediction through the serving score path.
+
+    Historically this pushed the WHOLE partition through the per-client
+    loop forward in one unbatched dispatch; it now routes through
+    ``repro.serve.vfl.score_partition`` — fixed ``block_b``-row slab
+    batches (remainder zero-padded and truncated), so eval device
+    memory is bounded by one block and the ``splitnn_bottom`` slab
+    kernel is exercised.  Outputs are bitwise-equal to the one-shot
+    forward on full batches (row independence; the scoring forward
+    reproduces ``splitnn_forward``'s reduction order)."""
+    from repro.serve.vfl import score_partition
+
+    out = score_partition(params, cfg, partition, block_b=block_b,
+                          bottom_impl=bottom_impl)
     if cfg.n_classes == 0:
         return out[:, 0]
     if cfg.n_classes == 2 and out.shape[-1] == 1:
@@ -205,10 +217,12 @@ def predict(params, cfg: SplitNNConfig, partition: VerticalPartition
     return out.argmax(axis=1)
 
 
-def evaluate(params, cfg: SplitNNConfig, partition: VerticalPartition
-             ) -> float:
-    """Accuracy for classification, MSE for regression."""
-    pred = predict(params, cfg, partition)
+def evaluate(params, cfg: SplitNNConfig, partition: VerticalPartition, *,
+             block_b: int = 512, bottom_impl: str = "ref") -> float:
+    """Accuracy for classification, MSE for regression (batched through
+    the serving score path — see ``predict``)."""
+    pred = predict(params, cfg, partition, block_b=block_b,
+                   bottom_impl=bottom_impl)
     if cfg.n_classes == 0:
         return float(np.mean((pred - partition.labels) ** 2))
     return float(np.mean(pred == partition.labels))
@@ -239,7 +253,14 @@ def knn_predict(train_part: VerticalPartition, test_part: VerticalPartition,
     the label owner votes — optionally weighted by the coreset weights —
     via one vectorized scatter-add per batch (``np.add.at`` over the
     (batch, k) neighbor grid; duplicate class indices accumulate in the
-    same j-ascending order as the per-neighbor loop it replaces)."""
+    same j-ascending order as the per-neighbor loop it replaces).
+
+    When n_te does not divide ``batch``, the final partial batch is
+    zero-padded to ``batch`` rows and its outputs truncated, so
+    ``_knn_neighbors`` compiles for exactly ONE test-batch shape instead
+    of retriggering a shape-specialized recompile on the remainder
+    (padded rows' neighbors are computed and discarded — predictions
+    are identical)."""
     n_tr = train_part.n_samples
     n_te = test_part.n_samples
     preds = np.empty(n_te, np.int64)
@@ -253,10 +274,15 @@ def knn_predict(train_part: VerticalPartition, test_part: VerticalPartition,
     train_sq = sum(jnp.sum(b * b, axis=1) for b in train_feats)
     for s in range(0, n_te, batch):
         e = min(s + batch, n_te)
-        test_feats = [jnp.asarray(f[s:e], jnp.float32)
-                      for f in test_part.client_features]
+        feats = [f[s:e] for f in test_part.client_features]
+        if e - s < batch and n_te > batch:
+            # pad the final partial batch back to the full-batch shape
+            pad = batch - (e - s)
+            feats = [np.concatenate(
+                [f, np.zeros((pad, f.shape[1]), f.dtype)]) for f in feats]
+        test_feats = [jnp.asarray(f, jnp.float32) for f in feats]
         nn = np.asarray(_knn_neighbors(test_feats, train_feats, train_sq,
-                                       kk))
+                                       kk))[:e - s]
         votes = np.zeros((e - s, n_classes))
         rows = np.broadcast_to(np.arange(e - s)[:, None], nn.shape)
         np.add.at(votes, (rows, labels[nn]), w[nn])

@@ -98,7 +98,9 @@ def run_pipeline(train_part: VerticalPartition,
                  mesh=None,
                  shard_axis: Optional[str] = None,
                  train_engine: str = "scan",
-                 bottom_impl: str = "ref") -> PipelineReport:
+                 bottom_impl: str = "ref",
+                 fuse_gather: bool = True,
+                 block_b: int = 512) -> PipelineReport:
     """``mesh`` (with optional ``shard_axis``) now shards ALL THREE
     device-path stages through one knob, and accepts 1-D ``("data",)``
     or 2-D ``(data, model)`` meshes (``launch.mesh.make_train_mesh``):
@@ -112,7 +114,12 @@ def run_pipeline(train_part: VerticalPartition,
     gemm/psum-reassociation ulps (DESIGN.md §5, §7).
     ``train_engine``/``bottom_impl`` select the training engine and the
     block-diagonal bottom implementation ("pallas" = the fused
-    VMEM-resident kernel on real TPU) — see ``train_splitnn``."""
+    VMEM-resident kernel on real TPU), and ``fuse_gather``/``block_b``
+    thread through to ``train_splitnn`` unchanged (the scalar-prefetch
+    schedule-gather toggle and the bottom kernel's batch tile — both
+    were silently dropped here before, so pipeline callers could never
+    actually toggle the fusion).  Evaluation reuses ``block_b`` and, for
+    the slab impls, ``bottom_impl`` through the batched scoring path."""
     variant = variant.lower()
     topology = "tree" if variant.startswith("tree") else (
         "path" if variant.startswith("path") else "star")
@@ -162,10 +169,14 @@ def run_pipeline(train_part: VerticalPartition,
         train_report = train_splitnn(train_data, cfg, sample_weights=weights,
                                      mesh=mesh, shard_axis=shard_axis,
                                      engine=train_engine,
-                                     bottom_impl=bottom_impl)
+                                     bottom_impl=bottom_impl,
+                                     fuse_gather=fuse_gather,
+                                     block_b=block_b)
         train_secs = (train_report.train_seconds
                       + train_report.simulated_comm_seconds)
-        metric = evaluate(train_report.params, cfg, test_part)
+        eval_impl = bottom_impl if bottom_impl in ("ref", "pallas") else "ref"
+        metric = evaluate(train_report.params, cfg, test_part,
+                          block_b=block_b, bottom_impl=eval_impl)
 
     return PipelineReport(
         variant=variant, mpsi=mpsi_stats, coreset=coreset_res,

@@ -1,3 +1,11 @@
-from repro.serve.engine import make_serve_step, make_prefill_step, greedy_decode
+from repro.serve.engine import (greedy_decode, make_prefill_step,
+                                make_serve_step)
+from repro.serve.vfl import (ScoreRequest, ServeStats, SimReport,
+                             VFLScoringEngine, score_partition,
+                             simulate_trace)
 
-__all__ = ["make_serve_step", "make_prefill_step", "greedy_decode"]
+__all__ = [
+    "make_serve_step", "make_prefill_step", "greedy_decode",
+    "ScoreRequest", "ServeStats", "SimReport", "VFLScoringEngine",
+    "score_partition", "simulate_trace",
+]

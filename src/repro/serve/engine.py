@@ -48,13 +48,18 @@ def greedy_decode(params, cfg: ArchConfig, prompt_tokens, n_new: int, *,
     """Prefill a prompt then greedily decode ``n_new`` tokens (CPU-scale)."""
     from repro.models import transformer
 
+    if prompt_tokens.shape[1] == 0:
+        # both branches bootstrap decoding from the last prompt logits;
+        # with no prompt token there is nothing to condition on (the
+        # audio branch would otherwise crash on logits=None below)
+        raise ValueError("greedy_decode needs at least one prompt token "
+                         "(got an empty prompt)")
     if cfg.family == "audio":
         from repro.models import encdec
         memory = encdec.encode(params, cfg, extra_embeds)
         b, s = prompt_tokens.shape
         caches = encdec.init_decode_state(params, cfg, b, s + n_new, memory)
         # teacher-force the prompt through the cache
-        tok = prompt_tokens[:, 0]
         logits = None
         for t in range(s):
             logits, caches = encdec.decode_step(

@@ -53,6 +53,7 @@ loss[-1]| < eps over the epoch-loss trace.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Any, List, Optional, Sequence, Tuple
 
@@ -199,6 +200,66 @@ def forward_slab_packed(packed, cfg, m: int, x_slab: jnp.ndarray, *,
     h = jnp.transpose(acts, (1, 0, 2)).reshape(bsz, m * o)
     h = jax.nn.relu(h @ packed["top"]["w1"] + packed["top"]["b1"])
     return h @ packed["top"]["w2"] + packed["top"]["b2"]
+
+
+def forward_slab_eval(packed, cfg, m: int, x_slab: jnp.ndarray, *,
+                      bottom_impl: str = "ref", block_b: int = 512):
+    """Serving/eval slab forward: the same packed-slab bottom pass as
+    ``forward_slab_packed`` (the ``splitnn_bottom`` kernel), but with the
+    top combination BITWISE-matching ``splitnn_forward``'s per-client
+    loop.  ``forward_slab_packed`` reduces the lr/linreg client sum with
+    ``jnp.sum`` over the M axis, which reassociates by ~1 ulp against
+    the loop's left-folded python ``sum``; the scoring path's contract
+    is bitwise equality with the legacy forward on full batches, so the
+    client sum unrolls here (mlp's transpose/reshape + top GEMMs are
+    already elementwise-identical to concat-then-matmul)."""
+    from repro.kernels.splitnn_bottom.ops import splitnn_bottom
+
+    w = packed["bw"]
+    o = w.shape[2]
+    b = packed.get("bb")
+    if b is None:
+        b = jnp.zeros((w.shape[0], o), jnp.float32)
+    relu = cfg.model == "mlp"
+    acts = splitnn_bottom(x_slab, w, b, relu, bottom_impl, block_b)
+    acts = acts[:m]                              # drop dummy-client padding
+    if cfg.model in ("lr", "linreg"):
+        out = acts[0]
+        for i in range(1, m):
+            out = out + acts[i]
+        return out + packed["top"]["b"]
+    bsz = acts.shape[1]
+    h = jnp.transpose(acts, (1, 0, 2)).reshape(bsz, m * o)
+    h = jax.nn.relu(h @ packed["top"]["w1"] + packed["top"]["b1"])
+    return h @ packed["top"]["w2"] + packed["top"]["b2"]
+
+
+@functools.lru_cache(maxsize=None)
+def _score_step_fn(cfg, m: int, bottom_impl: str, block_b: int):
+    """One jitted scoring executable per (config, client-count, impl,
+    block) — shared by every engine/eval call with the same signature so
+    repeated ``predict``/engine construction never recompiles."""
+    def score(packed, x_slab):
+        return forward_slab_eval(packed, cfg, m, x_slab,
+                                 bottom_impl=bottom_impl, block_b=block_b)
+    return jax.jit(score)
+
+
+def make_score_step(params, cfg, feature_dims: Sequence[int], *,
+                    bottom_impl: str = "ref", block_b: int = 512):
+    """``TrainReport.params`` (model-zoo form) → ``(packed, score_step)``:
+    the slab-params handoff for serving (DESIGN.md §9).
+
+    ``packed`` reuses ``pack_slab_params``, so serving and training
+    share ONE parameter layout — a checkpoint that trains under the scan
+    engine scores without any re-layout.  ``score_step(packed, x_slab)``
+    is jitted: ``x_slab`` is an (M, B, d_max) feature slab and the
+    result is (B, o) outputs, bitwise-equal to ``splitnn_forward`` on
+    the same rows (any B; one compile per distinct B).
+    """
+    fd = tuple(int(d) for d in feature_dims)
+    packed = pack_slab_params(params, max(fd))
+    return packed, _score_step_fn(cfg, len(fd), bottom_impl, int(block_b))
 
 
 # -------------------------------------------------------------- loss sums

@@ -87,3 +87,19 @@ def test_whisper_greedy_decode():
     prompt = jnp.asarray([[5, 9, 2]], jnp.int32)
     out = greedy_decode(params, cfg, prompt, 3, extra_embeds=frames)
     assert out.shape == (1, 3)
+
+
+def test_greedy_decode_rejects_empty_prompt():
+    """Regression: an empty prompt used to fall through to the decode
+    loop and crash on ``logits=None`` (audio) or produce an
+    unconditioned bootstrap (dense); both branches now fail fast."""
+    for name in ("tinyllama-1.1b", "whisper-large-v3"):
+        cfg = get_config(name).reduced()
+        params = api.init_params(jax.random.PRNGKey(0), cfg)
+        empty = jnp.zeros((1, 0), jnp.int32)
+        kw = {}
+        if cfg.family == "audio":
+            kw["extra_embeds"] = jnp.zeros((1, cfg.enc_seq, cfg.d_model),
+                                           jnp.float32)
+        with pytest.raises(ValueError, match="empty prompt"):
+            greedy_decode(params, cfg, empty, 2, **kw)

@@ -74,3 +74,34 @@ def test_convergence_criterion_stops_early():
                         max_epochs=200, convergence_eps=1e-3)
     rep = train_splitnn(tr, cfg)
     assert rep.epochs < 200
+
+
+def test_knn_partial_batch_pads_to_one_shape(monkeypatch):
+    """Regression: the final partial test batch used to hit
+    ``_knn_neighbors`` with a smaller shape, triggering a second jit
+    specialization per (n_te % batch). It now pads to ``batch`` rows and
+    truncates — one compiled shape, identical predictions."""
+    from repro.core import splitnn as mod
+    tr = make_cls_partition(n=300, d=12, seed=7, margin=4.0)
+    te = make_cls_partition(n=130, d=12, seed=8, margin=4.0)
+
+    shapes = []
+    real = mod._knn_neighbors
+
+    def spy(test_feats, train_feats, train_sq, kk):
+        shapes.append(tuple(f.shape for f in test_feats))
+        return real(test_feats, train_feats, train_sq, kk)
+
+    monkeypatch.setattr(mod, "_knn_neighbors", spy)
+    pred = mod.knn_predict(tr, te, k=5, batch=64)
+    assert len(shapes) == 3                      # 64 + 64 + 2(padded to 64)
+    assert len(set(shapes)) == 1                 # ONE device shape
+    assert shapes[0][0][0] == 64
+    monkeypatch.undo()
+    # padding never changes the answer
+    assert np.array_equal(pred, knn_predict(tr, te, k=5, batch=130))
+    # n_te <= batch keeps the historical exact shape (no useless padding)
+    shapes.clear()
+    monkeypatch.setattr(mod, "_knn_neighbors", spy)
+    mod.knn_predict(tr, te, k=5, batch=512)
+    assert shapes[0][0][0] == 130
