@@ -11,6 +11,15 @@ runner-noise-free by construction, and the same contract holds on 1-D
 and 2-D meshes (sharding never changes the counters — that is itself
 part of the contract, so shard counts are deliberately NOT pinned).
 
+Sourcing (DESIGN.md §10): the table2_e2e.csv values this gate reads are
+produced from each run's ``MetricsRegistry`` snapshot
+(``PipelineReport.emit_metrics``), and the pinned serve field list is
+``ServeStats.CONTRACT_FIELDS`` — declared on the dataclass next to the
+fields themselves, so the gate, the benchmark CSVs, and the stats
+objects can never drift apart.  A tracing-enabled run must pass this
+gate unchanged: spans only bracket host code already on the execution
+path.
+
 Usage (CI runs the first form after ``run_e2e(smoke=True)``):
 
     python -m benchmarks.check_contract
@@ -27,6 +36,8 @@ import json
 import os
 import sys
 
+from repro.serve.vfl import ServeStats
+
 DEFAULT_CSV = os.path.join("experiments", "bench", "table2_e2e.csv")
 DEFAULT_SERVE_CSV = os.path.join("experiments", "bench",
                                  "serve_vfl_smoke.csv")
@@ -37,10 +48,10 @@ KEY = ("dataset", "model", "variant")
 
 # serving-engine smoke rows (benchmarks.serve_vfl.run_smoke): the
 # scheduler's counters are a pure function of (trace, slots, policy,
-# service model) — params never enter — so they pin exactly
+# service model) — params never enter — so they pin exactly.  The field
+# list lives on the dataclass itself (StatsMixin.CONTRACT_FIELDS).
 SERVE_KEY = ("policy", "load_frac")
-SERVE_FIELDS = ("dispatches", "admitted_rows", "padded_slots",
-                "occupancy_sum", "completed", "forced_splits")
+SERVE_FIELDS = ServeStats.CONTRACT_FIELDS
 
 
 def _ratio(total: int, epochs: int) -> float:

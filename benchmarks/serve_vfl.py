@@ -28,7 +28,8 @@ import numpy as np
 from benchmarks.common import dataset_partitions, emit, fmt
 from repro.core.splitnn import SplitNNConfig, train_splitnn
 from repro.data.vertical import VerticalPartition
-from repro.serve.vfl import (ScoreRequest, VFLScoringEngine, simulate_trace)
+from repro.serve.vfl import (ScoreRequest, ServeStats, VFLScoringEngine,
+                             simulate_trace)
 
 # fixed virtual per-dispatch service time: ~the interpreter-mode slab
 # forward at these shapes; the exact value only scales the time axis
@@ -85,7 +86,7 @@ def _sweep(report, cfg, part, *, slots: int, n_requests: int,
             outputs[policy] = sim.results
             st = sim.stats
             assert st.completed == n_requests, (policy, st)
-            rows.append({
+            row = {
                 "policy": policy,
                 "offered_rows_s": fmt(load, 1),
                 "load_frac": fmt(frac, 2),
@@ -98,15 +99,23 @@ def _sweep(report, cfg, part, *, slots: int, n_requests: int,
                 "makespan_s": fmt(sim.makespan, 4),
                 "throughput_rows_s": fmt(
                     st.admitted_rows / max(sim.makespan, 1e-12), 1),
-                "dispatches": st.dispatches,
-                "admitted_rows": st.admitted_rows,
-                "padded_slots": st.padded_slots,
-                "occupancy_sum": st.occupancy_sum,
+            }
+            # the contract-pinned scheduler counters, straight from the
+            # dataclass's own field list (StatsMixin — no hand copies)
+            row.update(st.as_row(ServeStats.CONTRACT_FIELDS))
+            # per-dispatch service-time distribution: virtual-clock svc_*
+            # is deterministic; wall_* is the measured slab forward
+            row.update({
                 "mean_occupancy": fmt(st.mean_occupancy, 3),
-                "completed": st.completed,
-                "forced_splits": st.forced_splits,
+                "svc_p50_ms": fmt(sim.service_hist.percentile(50) * 1e3, 3),
+                "svc_p99_ms": fmt(sim.service_hist.percentile(99) * 1e3, 3),
+                "svc_wall_p50_ms": fmt(
+                    sim.wall_hist.percentile(50) * 1e3, 3),
+                "svc_wall_p99_ms": fmt(
+                    sim.wall_hist.percentile(99) * 1e3, 3),
                 "wall_s": fmt(sim.wall_seconds, 3),
             })
+            rows.append(row)
         # the policies change WHEN rows are scored, never WHAT they score
         assert all(np.array_equal(outputs["continuous"][r],
                                   outputs["blocking"][r])

@@ -14,10 +14,13 @@ in the bench log.
 """
 from __future__ import annotations
 
+import os
 from typing import Optional
 
 from benchmarks.common import dataset_partitions, emit, fmt
 from repro.core import SplitNNConfig, run_pipeline
+from repro.obs import (MetricsRegistry, Tracer, validate_chrome_trace,
+                       write_chrome_trace)
 
 # dataset → (model, n_classes, lr, clusters/client) per the paper's Table 2
 JOBS = [
@@ -68,7 +71,8 @@ def run(quick: bool = True):
 
 
 def run_e2e(quick: bool = True, smoke: bool = False, mesh=None,
-            n_override: Optional[int] = None, bottom_impl: str = "ref"):
+            n_override: Optional[int] = None, bottom_impl: str = "ref",
+            trace_out: Optional[str] = None):
     """End-to-end Table-2 artifact with per-variant STAGE timings.
 
     ``smoke=True`` (CI): two jobs at n=500 with short training, enough
@@ -77,10 +81,20 @@ def run_e2e(quick: bool = True, smoke: bool = False, mesh=None,
     measures the sharded pipeline on a real mesh; ``bottom_impl=
     "pallas"`` measures the fused VMEM-resident bottom kernel (real TPU
     — under the CPU interpreter it times the emulator).
+
+    ``trace_out`` turns on span tracing (DESIGN.md §10): ONE tracer is
+    shared across every (job, variant) run, so the written Chrome-trace
+    JSON is a single timeline covering all four stages of all runs —
+    validated (schema + all four stage categories present) before the
+    file is written.  Every row's counters come from the per-run
+    ``MetricsRegistry`` snapshot (``PipelineReport.emit_metrics``), the
+    same source the CI contract gate reads — tracing must not change
+    any of them.
     """
     jobs = JOBS[:2] if smoke else JOBS
     if smoke and n_override is None:
         n_override = 500
+    tracer = Tracer() if trace_out else None
     rows = []
     for ds, model, n_classes, lr, k in jobs:
         tr, te = dataset_partitions(ds, quick=quick, n_override=n_override)
@@ -92,29 +106,44 @@ def run_e2e(quick: bool = True, smoke: bool = False, mesh=None,
         for variant in VARIANTS:
             rep = run_pipeline(tr, te, cfg, variant=variant,
                                clusters_per_client=k, protocol="oprf",
-                               seed=0, mesh=mesh, bottom_impl=bottom_impl)
+                               seed=0, mesh=mesh, bottom_impl=bottom_impl,
+                               trace=tracer)
             totals[variant] = rep.total_seconds
-            es = rep.train.engine_stats
+            # one registry per run; its snapshot is the row — the gate
+            # and the CSV can never disagree with the dataclasses
+            reg = MetricsRegistry()
+            rep.emit_metrics(reg)
+            snap = reg.snapshot()
             rows.append({
                 "dataset": ds, "model": model, "variant": variant,
-                "n_train": rep.n_train,
-                "align_s": fmt(rep.align_seconds, 4),
-                "align_wall_s": fmt(rep.align_wall_seconds, 4),
-                "coreset_s": fmt(rep.coreset_seconds, 4),
-                "train_s": fmt(rep.train_seconds, 4),
+                "n_train": snap["pipeline.n_train"],
+                "align_s": fmt(snap["pipeline.align_seconds"], 4),
+                "align_wall_s": fmt(snap["pipeline.align_wall_seconds"], 4),
+                "coreset_s": fmt(snap["pipeline.coreset_seconds"], 4),
+                "coreset_wall_s": fmt(
+                    snap["pipeline.coreset_wall_seconds"], 4),
+                "train_s": fmt(snap["pipeline.train_seconds"], 4),
+                "train_wall_s": fmt(snap["pipeline.train_wall_seconds"], 4),
                 "total_s": fmt(rep.total_seconds, 4),
-                "metric": fmt(rep.metric, 4),
-                "epochs": rep.train.epochs,
-                "steps": rep.train.steps,
-                "dispatches": es.dispatches if es else "",
-                "host_syncs": es.host_syncs if es else "",
-                "comm_bytes": rep.train.comm_bytes,
-                "train_shards": es.shards if es else "",
-                "model_shards": es.model_shards if es else "",
+                "metric": fmt(snap["pipeline.metric"], 4),
+                "epochs": snap["train.epochs"],
+                "steps": snap["train.steps"],
+                "dispatches": snap.get("train.dispatches", ""),
+                "host_syncs": snap.get("train.host_syncs", ""),
+                "comm_bytes": snap["train.comm_bytes"],
+                "train_shards": snap.get("train.shards", ""),
+                "model_shards": snap.get("train.model_shards", ""),
                 "speedup_vs_starall": fmt(
                     totals["starall"] / max(rep.total_seconds, 1e-12), 2),
             })
     emit(rows, "table2_e2e")
+    if trace_out:
+        os.makedirs(os.path.dirname(trace_out) or ".", exist_ok=True)
+        doc = write_chrome_trace(tracer, trace_out)
+        n_ev = validate_chrome_trace(
+            doc, require_cats=("align", "coreset", "train", "serve",
+                               "pipeline"))
+        print(f"wrote {n_ev} trace events -> {trace_out}")
     tc = [float(r["speedup_vs_starall"]) for r in rows
           if r["variant"] == "treecss"]
     print(f"\nmean TREECSS-vs-STARALL end-to-end speedup: "

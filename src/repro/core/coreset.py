@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.core import he
 from repro.core.kmeans import kmeans, kmeans_fit
+from repro.obs.trace import span
 from repro.data.vertical import VerticalPartition
 from repro.sharding import batch_shard_map, pad_batch_rows, \
     resolve_batch_mesh
@@ -293,24 +294,33 @@ def cluster_coreset(partition: VerticalPartition, clusters_per_client: int, *,
     batchable = clients_batchable(feats, algo=kmeans_algo,
                                   batch_clients=batch_clients,
                                   clusters=clusters_per_client)
-    if batchable:
-        local, t_exec, n_shards = _batched_local_clusterings(
-            feats, clusters_per_client, seed=seed, iters=kmeans_iters,
-            impl=kmeans_impl, mesh=mesh, shard_axis=shard_axis)
-        per_client = [t_exec / len(feats)] * len(feats)
-    else:
-        local = []
-        per_client = []
-        for m, f in enumerate(feats):
-            t0 = time.perf_counter()
-            local.append(local_cluster_weights(
-                f, clusters_per_client, seed=seed + 17 * m,
-                iters=kmeans_iters, impl=kmeans_impl, algo=kmeans_algo))
-            per_client.append(time.perf_counter() - t0)
-    t0 = time.perf_counter()
-    idx, w, n_groups = select_coreset(local, partition.labels)
-    select_secs = time.perf_counter() - t0
-    comm, he_secs = _he_exchange_cost(local, partition.n_samples, use_he)
+    with span("coreset.fit", clients=len(feats), batched=batchable,
+              k=clusters_per_client, algo=kmeans_algo) as fit_sp:
+        if batchable:
+            local, t_exec, n_shards = _batched_local_clusterings(
+                feats, clusters_per_client, seed=seed, iters=kmeans_iters,
+                impl=kmeans_impl, mesh=mesh, shard_axis=shard_axis)
+            per_client = [t_exec / len(feats)] * len(feats)
+        else:
+            local = []
+            per_client = []
+            for m, f in enumerate(feats):
+                t0 = time.perf_counter()
+                local.append(local_cluster_weights(
+                    f, clusters_per_client, seed=seed + 17 * m,
+                    iters=kmeans_iters, impl=kmeans_impl, algo=kmeans_algo))
+                per_client.append(time.perf_counter() - t0)
+        fit_sp.set(shards=n_shards)
+    sel_sp = span("coreset.select", rows=partition.n_samples)
+    with sel_sp:
+        t0 = time.perf_counter()
+        idx, w, n_groups = select_coreset(local, partition.labels)
+        select_secs = time.perf_counter() - t0
+    sel_sp.set(n_coreset=int(idx.shape[0]), n_groups=n_groups)
+    he_sp = span("coreset.he", use_he=use_he, clients=len(feats))
+    with he_sp:
+        comm, he_secs = _he_exchange_cost(local, partition.n_samples, use_he)
+    he_sp.set(comm_bytes=comm)
     return CoresetResult(indices=idx, weights=w, n_groups=n_groups,
                          comm_bytes=comm, he_seconds=he_secs, local=local,
                          per_client_seconds=per_client,

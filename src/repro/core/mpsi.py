@@ -41,13 +41,18 @@ from repro.core.tpsi import (ID_BYTES, TPSIResult, canonical_ids,
                              oprf_seed_words, oprf_session_rng,
                              rsa_accounting, rsa_match_inputs,
                              rsa_sign_stage, run_tpsi)
+from repro.obs.metrics import StatsMixin
+from repro.obs.trace import span
 
 DEFAULT_BANDWIDTH = 10e9 / 8     # 10 Gbps in bytes/s (paper's cluster)
 DEFAULT_LATENCY = 2e-4           # per message
 
 
 @dataclasses.dataclass
-class MPSIStats:
+class MPSIStats(StatsMixin):
+    """Alignment-stage stats.  ``StatsMixin`` (DESIGN.md §10) provides
+    ``to_dict``/``as_row``/``emit`` over the scalar fields (the array
+    intersection and per-round lists are skipped by the mixin)."""
     intersection: np.ndarray
     rounds: int
     total_bytes: int
@@ -208,28 +213,34 @@ def tree_mpsi(id_sets: Sequence[np.ndarray], *, protocol: str = "rsa",
                 sender, receiver = a, b
             roles.append((sender, receiver))
 
-        if backend == "device":
-            inters, r_bytes, r_msgs, r_compute, r_makespan = _device_round(
-                roles, holdings, protocol, engine_impl, bandwidth, latency,
-                mesh, shard_axis)
-            for (sender, receiver), inter in zip(roles, inters):
-                holdings[receiver] = inter
-            total_bytes += r_bytes
-            total_msgs += r_msgs
-            compute += r_compute
-            dispatches += 1
-            per_round.append(r_makespan)
-        else:
-            round_times: List[float] = []
-            for sender, receiver in roles:
-                res = run_tpsi(protocol, holdings[sender],
-                               holdings[receiver])
-                holdings[receiver] = res.intersection
-                total_bytes += res.total_bytes
-                total_msgs += res.messages
-                compute += res.compute_seconds
-                round_times.append(_pair_time(res, bandwidth, latency))
-            per_round.append(max(round_times) if round_times else 0.0)
+        bytes_before = total_bytes
+        with span("align.round", round=len(schedule), pairs=len(roles),
+                  topology="tree", protocol=protocol,
+                  backend=backend) as round_sp:
+            if backend == "device":
+                inters, r_bytes, r_msgs, r_compute, r_makespan = \
+                    _device_round(roles, holdings, protocol, engine_impl,
+                                  bandwidth, latency, mesh, shard_axis)
+                for (sender, receiver), inter in zip(roles, inters):
+                    holdings[receiver] = inter
+                total_bytes += r_bytes
+                total_msgs += r_msgs
+                compute += r_compute
+                dispatches += 1
+                per_round.append(r_makespan)
+            else:
+                round_times: List[float] = []
+                for sender, receiver in roles:
+                    res = run_tpsi(protocol, holdings[sender],
+                                   holdings[receiver])
+                    holdings[receiver] = res.intersection
+                    total_bytes += res.total_bytes
+                    total_msgs += res.messages
+                    compute += res.compute_seconds
+                    round_times.append(_pair_time(res, bandwidth, latency))
+                per_round.append(max(round_times) if round_times else 0.0)
+            round_sp.set(comm_bytes=total_bytes - bytes_before,
+                         simulated_s=per_round[-1])
 
         next_active = [receiver for _, receiver in roles]
         if passthrough is not None:
@@ -238,8 +249,11 @@ def tree_mpsi(id_sets: Sequence[np.ndarray], *, protocol: str = "rsa",
         schedule.append(roles)
 
     inter = holdings[active[0]]
-    b_bytes, b_msgs, b_secs = _broadcast_result(
-        inter, m, use_he=use_he, bandwidth=bandwidth, latency=latency)
+    with span("align.broadcast", n_clients=m, n_align=len(inter),
+              use_he=use_he) as bc_sp:
+        b_bytes, b_msgs, b_secs = _broadcast_result(
+            inter, m, use_he=use_he, bandwidth=bandwidth, latency=latency)
+        bc_sp.set(comm_bytes=b_bytes)
     total_bytes += b_bytes
     total_msgs += b_msgs
     per_round.append(b_secs)
@@ -268,9 +282,12 @@ def path_mpsi(id_sets: Sequence[np.ndarray], *, protocol: str = "rsa",
     per_round: List[float] = []
     schedule: List[List[Tuple[int, int]]] = []
     for i in range(1, m):
-        res = run_tpsi(protocol, cur, np.asarray(id_sets[i]),
-                       backend=backend, engine_impl=engine_impl,
-                       mesh=mesh, shard_axis=shard_axis)
+        with span("align.round", round=i - 1, pairs=1, topology="path",
+                  protocol=protocol, backend=backend) as round_sp:
+            res = run_tpsi(protocol, cur, np.asarray(id_sets[i]),
+                           backend=backend, engine_impl=engine_impl,
+                           mesh=mesh, shard_axis=shard_axis)
+            round_sp.set(comm_bytes=res.total_bytes)
         cur = res.intersection
         total_bytes += res.total_bytes
         total_msgs += res.messages
@@ -315,9 +332,13 @@ def star_mpsi(id_sets: Sequence[np.ndarray], *, protocol: str = "rsa",
         if i == center:
             continue
         # center acts as receiver (it accumulates the running intersection)
-        res = run_tpsi(protocol, np.asarray(id_sets[i]), cur,
-                       backend=backend, engine_impl=engine_impl,
-                       mesh=mesh, shard_axis=shard_axis)
+        with span("align.round", round=len(schedule[0]), pairs=1,
+                  topology="star", protocol=protocol,
+                  backend=backend) as round_sp:
+            res = run_tpsi(protocol, np.asarray(id_sets[i]), cur,
+                           backend=backend, engine_impl=engine_impl,
+                           mesh=mesh, shard_axis=shard_axis)
+            round_sp.set(comm_bytes=res.total_bytes)
         cur = res.intersection
         total_bytes += res.total_bytes
         total_msgs += res.messages

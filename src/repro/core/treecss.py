@@ -14,7 +14,6 @@ report so benchmarks can reproduce the Table-2 time comparison.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -25,6 +24,8 @@ from repro.core.splitnn import (SplitNNConfig, TrainReport, evaluate,
                                 knn_predict, train_splitnn)
 from repro.data.synthetic import make_id_universe
 from repro.data.vertical import VerticalPartition
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import Tracer, now, span, use_tracer
 
 
 @dataclasses.dataclass
@@ -39,10 +40,48 @@ class PipelineReport:
     train_seconds: float
     n_train: int
     align_wall_seconds: float = 0.0   # measured alignment wall time
+    # measured stage wall times, all read from the one obs span clock so
+    # they stay comparable to trace timelines (DESIGN.md §10)
+    coreset_wall_seconds: float = 0.0
+    train_wall_seconds: float = 0.0
+    tracer: Optional[Tracer] = dataclasses.field(default=None, repr=False)
 
     @property
     def total_seconds(self) -> float:
         return self.align_seconds + self.coreset_seconds + self.train_seconds
+
+    def emit_metrics(self, registry: MetricsRegistry) -> None:
+        """Emit every stage's numbers into ``registry`` — the single
+        snapshot the benchmarks and the CI contract gate read
+        (DESIGN.md §10).  Namespaces: ``align.*`` (MPSIStats),
+        ``train.*`` (EngineStats + TrainReport scalars), ``coreset.*``,
+        ``pipeline.*`` (stage wall/simulated times, metric, n_train)."""
+        self.mpsi.emit(registry, "align.")
+        if self.train.engine_stats is not None:
+            self.train.engine_stats.emit(registry, "train.")
+        registry.counter("train.epochs").inc(self.train.epochs)
+        registry.counter("train.steps").inc(self.train.steps)
+        registry.counter("train.comm_bytes").inc(self.train.comm_bytes)
+        registry.gauge("train.train_seconds").set(self.train.train_seconds)
+        registry.gauge("train.simulated_comm_seconds").set(
+            self.train.simulated_comm_seconds)
+        if self.coreset is not None:
+            registry.counter("coreset.n_coreset").inc(
+                int(self.coreset.indices.shape[0]))
+            registry.counter("coreset.n_groups").inc(self.coreset.n_groups)
+            registry.counter("coreset.comm_bytes").inc(
+                self.coreset.comm_bytes)
+        registry.gauge("pipeline.metric").set(self.metric)
+        registry.counter("pipeline.n_train").inc(self.n_train)
+        registry.gauge("pipeline.align_seconds").set(self.align_seconds)
+        registry.gauge("pipeline.coreset_seconds").set(self.coreset_seconds)
+        registry.gauge("pipeline.train_seconds").set(self.train_seconds)
+        registry.gauge("pipeline.align_wall_seconds").set(
+            self.align_wall_seconds)
+        registry.gauge("pipeline.coreset_wall_seconds").set(
+            self.coreset_wall_seconds)
+        registry.gauge("pipeline.train_wall_seconds").set(
+            self.train_wall_seconds)
 
 
 def _align(partition: VerticalPartition, topology: str, *, overlap: float,
@@ -68,10 +107,15 @@ def _align(partition: VerticalPartition, topology: str, *, overlap: float,
     n = partition.n_samples
     m = partition.n_clients
     sets, _core = make_id_universe(m, n, overlap, seed=seed)
-    t0 = time.perf_counter()
-    stats = MPSI[topology](sets, protocol=protocol, backend=psi_backend,
-                           mesh=mesh, shard_axis=shard_axis)
-    align_wall = time.perf_counter() - t0
+    sp = span("align.mpsi", topology=topology, protocol=protocol,
+              backend=psi_backend, n_clients=m, n_ids=n)
+    t0 = now()
+    with sp:
+        stats = MPSI[topology](sets, protocol=protocol, backend=psi_backend,
+                               mesh=mesh, shard_axis=shard_axis)
+    align_wall = now() - t0
+    sp.set(comm_bytes=stats.total_bytes, rounds=stats.rounds,
+           n_align=int(stats.intersection.shape[0]))
     inter = stats.intersection
     # id -> row: invert the label owner's id list (ids are unique, and
     # inter ⊆ sets[0] because it intersects every client's set)
@@ -100,7 +144,8 @@ def run_pipeline(train_part: VerticalPartition,
                  train_engine: str = "scan",
                  bottom_impl: str = "ref",
                  fuse_gather: bool = True,
-                 block_b: int = 512) -> PipelineReport:
+                 block_b: int = 512,
+                 trace=None) -> PipelineReport:
     """``mesh`` (with optional ``shard_axis``) now shards ALL THREE
     device-path stages through one knob, and accepts 1-D ``("data",)``
     or 2-D ``(data, model)`` meshes (``launch.mesh.make_train_mesh``):
@@ -119,67 +164,105 @@ def run_pipeline(train_part: VerticalPartition,
     schedule-gather toggle and the bottom kernel's batch tile — both
     were silently dropped here before, so pipeline callers could never
     actually toggle the fusion).  Evaluation reuses ``block_b`` and, for
-    the slab impls, ``bottom_impl`` through the batched scoring path."""
+    the slab impls, ``bottom_impl`` through the batched scoring path.
+
+    ``trace`` turns on the observability layer (DESIGN.md §10): pass a
+    ``repro.obs.Tracer`` to collect this run's spans into it (sharing
+    one tracer across calls builds a single timeline), or any truthy
+    value to self-create one — either way the tracer comes back on
+    ``PipelineReport.tracer`` for Chrome-trace export.  Tracing only
+    brackets host code already on the execution path, so engine
+    counters (dispatches/host syncs) are unchanged by it."""
     variant = variant.lower()
     topology = "tree" if variant.startswith("tree") else (
         "path" if variant.startswith("path") else "star")
     use_css = variant.endswith("css")
+    tracer = trace if isinstance(trace, Tracer) else (
+        Tracer() if trace else None)
 
-    aligned, mpsi_stats, align_secs, align_wall = _align(
-        train_part, topology, overlap=overlap, protocol=protocol,
-        seed=seed, psi_backend=psi_backend, mesh=mesh,
-        shard_axis=shard_axis)
+    with use_tracer(tracer), span("pipeline.run", variant=variant,
+                                  model=cfg.model, seed=seed):
+        with span("pipeline.align", topology=topology, protocol=protocol,
+                  backend=psi_backend):
+            aligned, mpsi_stats, align_secs, align_wall = _align(
+                train_part, topology, overlap=overlap, protocol=protocol,
+                seed=seed, psi_backend=psi_backend, mesh=mesh,
+                shard_axis=shard_axis)
 
-    coreset_res = None
-    weights = None
-    if use_css:
-        from repro.core.coreset import clients_batchable
-        if not clients_batchable(aligned.client_features,
-                                 clusters=clusters_per_client):
-            # sequential path: warm the kmeans jit cache on the exact
-            # shapes so stage timing compares protocols, not XLA
-            # compilation (the batched path AOT-compiles internally)
-            for f in aligned.client_features:
-                from repro.core.kmeans import kmeans as _km
-                _km(f, min(clusters_per_client, f.shape[0]), seed=seed,
-                    impl=kmeans_impl)
-        coreset_res = cluster_coreset(
-            aligned, clusters_per_client, seed=seed, kmeans_impl=kmeans_impl,
-            mesh=mesh, shard_axis=shard_axis)
-        train_data = aligned.take(coreset_res.indices)
-        if use_weights:
-            weights = coreset_res.weights
-        # steps 1-2 run concurrently on the clients: stage cost is the
-        # per-client makespan + label-owner selection (+ HE)
-        coreset_secs = coreset_res.makespan_seconds
-    else:
-        train_data = aligned
-        coreset_secs = 0.0
+        coreset_res = None
+        weights = None
+        coreset_wall = 0.0
+        if use_css:
+            from repro.core.coreset import clients_batchable
+            if not clients_batchable(aligned.client_features,
+                                     clusters=clusters_per_client):
+                # sequential path: warm the kmeans jit cache on the exact
+                # shapes so stage timing compares protocols, not XLA
+                # compilation (the batched path AOT-compiles internally)
+                for f in aligned.client_features:
+                    from repro.core.kmeans import kmeans as _km
+                    _km(f, min(clusters_per_client, f.shape[0]), seed=seed,
+                        impl=kmeans_impl)
+            cs_sp = span("pipeline.coreset", k=clusters_per_client,
+                         rows=aligned.n_samples)
+            t0 = now()
+            with cs_sp:
+                coreset_res = cluster_coreset(
+                    aligned, clusters_per_client, seed=seed,
+                    kmeans_impl=kmeans_impl, mesh=mesh,
+                    shard_axis=shard_axis)
+            coreset_wall = now() - t0
+            cs_sp.set(n_coreset=int(coreset_res.indices.shape[0]),
+                      comm_bytes=coreset_res.comm_bytes)
+            train_data = aligned.take(coreset_res.indices)
+            if use_weights:
+                weights = coreset_res.weights
+            # steps 1-2 run concurrently on the clients: stage cost is the
+            # per-client makespan + label-owner selection (+ HE)
+            coreset_secs = coreset_res.makespan_seconds
+        else:
+            train_data = aligned
+            coreset_secs = 0.0
 
-    if cfg.model == "knn":
-        t0 = time.perf_counter()
-        pred = knn_predict(train_data, test_part, knn_k,
-                           sample_weights=weights)
-        train_secs = time.perf_counter() - t0
-        metric = float(np.mean(pred == test_part.labels))
-        train_report = TrainReport(losses=[], epochs=0, steps=0,
-                                   train_seconds=train_secs, comm_bytes=0,
-                                   simulated_comm_seconds=0.0, params=None)
-    else:
-        train_report = train_splitnn(train_data, cfg, sample_weights=weights,
-                                     mesh=mesh, shard_axis=shard_axis,
-                                     engine=train_engine,
-                                     bottom_impl=bottom_impl,
-                                     fuse_gather=fuse_gather,
-                                     block_b=block_b)
-        train_secs = (train_report.train_seconds
-                      + train_report.simulated_comm_seconds)
-        eval_impl = bottom_impl if bottom_impl in ("ref", "pallas") else "ref"
-        metric = evaluate(train_report.params, cfg, test_part,
-                          block_b=block_b, bottom_impl=eval_impl)
+        if cfg.model == "knn":
+            t0 = now()
+            with span("pipeline.train", model="knn",
+                      rows=train_data.n_samples):
+                pred = knn_predict(train_data, test_part, knn_k,
+                                   sample_weights=weights)
+            train_secs = now() - t0
+            train_wall = train_secs
+            metric = float(np.mean(pred == test_part.labels))
+            train_report = TrainReport(losses=[], epochs=0, steps=0,
+                                       train_seconds=train_secs,
+                                       comm_bytes=0,
+                                       simulated_comm_seconds=0.0,
+                                       params=None)
+        else:
+            tr_sp = span("pipeline.train", model=cfg.model,
+                         engine=train_engine, rows=train_data.n_samples)
+            t0 = now()
+            with tr_sp:
+                train_report = train_splitnn(
+                    train_data, cfg, sample_weights=weights,
+                    mesh=mesh, shard_axis=shard_axis,
+                    engine=train_engine, bottom_impl=bottom_impl,
+                    fuse_gather=fuse_gather, block_b=block_b)
+            train_wall = now() - t0
+            tr_sp.set(comm_bytes=train_report.comm_bytes,
+                      epochs=train_report.epochs)
+            train_secs = (train_report.train_seconds
+                          + train_report.simulated_comm_seconds)
+            eval_impl = (bottom_impl if bottom_impl in ("ref", "pallas")
+                         else "ref")
+            with span("pipeline.serve", rows=test_part.n_samples):
+                metric = evaluate(train_report.params, cfg, test_part,
+                                  block_b=block_b, bottom_impl=eval_impl)
 
     return PipelineReport(
         variant=variant, mpsi=mpsi_stats, coreset=coreset_res,
         train=train_report, metric=metric, align_seconds=align_secs,
         coreset_seconds=coreset_secs, train_seconds=train_secs,
-        n_train=train_data.n_samples, align_wall_seconds=align_wall)
+        n_train=train_data.n_samples, align_wall_seconds=align_wall,
+        coreset_wall_seconds=coreset_wall, train_wall_seconds=train_wall,
+        tracer=tracer)

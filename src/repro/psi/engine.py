@@ -69,6 +69,7 @@ from repro.kernels.psi_prf.ops import prf_tags
 from repro.kernels.sorted_intersect.ops import (next_pow2, pack_keys,
                                                 sorted_intersect)
 from repro.kernels.sorted_intersect.ref import PAD_A, PAD_B
+from repro.obs.trace import span
 from repro.sharding import (batch_shard_map, pad_batch_rows, padded_rows,
                             resolve_batch_mesh)
 
@@ -233,15 +234,19 @@ def _host_sorted_merge(r_tags64: Sequence[np.ndarray],
     b_kh = np.empty((b, p), np.uint32)
     b_kl = np.empty((b, p), np.uint32)
     ids_by_tag: List[np.ndarray] = []
-    for i in range(b):
-        order = np.argsort(r_tags64[i])
-        ids_by_tag.append(np.asarray(receiver_ids[i], np.int64)[order])
-        a_kh[i], a_kl[i] = _host_key_rows(r_tags64[i][order], 1, PAD_A, p)
-        b_kh[i], b_kl[i] = _host_key_rows(np.sort(s_tags64[i]), 0,
-                                          PAD_B, p)
+    with span("align.host_sort", pairs=b, p=p):
+        for i in range(b):
+            order = np.argsort(r_tags64[i])
+            ids_by_tag.append(np.asarray(receiver_ids[i], np.int64)[order])
+            a_kh[i], a_kl[i] = _host_key_rows(r_tags64[i][order], 1, PAD_A,
+                                              p)
+            b_kh[i], b_kl[i] = _host_key_rows(np.sort(s_tags64[i]), 0,
+                                              PAD_B, p)
     args, _ = pad_batch_rows((a_kh, a_kl, b_kh, b_kl), n_shards)
-    sel_rank = jax.block_until_ready(
-        _dispatch("merge", impl, mesh, axis)(*args))
+    with span("align.dispatch", kind="merge", pairs=b, p=p,
+              shards=n_shards):
+        sel_rank = jax.block_until_ready(
+            _dispatch("merge", impl, mesh, axis)(*args))
     sel = np.asarray(sel_rank[0])[:b].astype(bool)
     rank = np.asarray(sel_rank[1])[:b]
     return [np.sort(ids_by_tag[i][rank[i][sel[i]] - 1])
@@ -279,7 +284,9 @@ def oprf_round(sender_sets: Sequence[np.ndarray],
         _warm("single", args[0].shape[0], p, impl, mesh, axis)
         fn = _dispatch("single", impl, mesh, axis)
         t0 = time.perf_counter()
-        out = jax.block_until_ready(fn(*args))
+        with span("align.dispatch", kind="single", pairs=b, p=p,
+                  shards=n_shards):
+            out = jax.block_until_ready(fn(*args))
         sel = np.asarray(out[0])[:b].astype(bool)
         ids = (np.asarray(out[1], np.uint64)[:b] << np.uint64(32)) \
             | np.asarray(out[2], np.uint64)[:b]
@@ -294,7 +301,9 @@ def oprf_round(sender_sets: Sequence[np.ndarray],
     _warm("merge", bp, p, impl, mesh, axis)
     fn = _dispatch("prf", impl, mesh, axis)
     t0 = time.perf_counter()
-    tags = jax.block_until_ready(fn(*args))
+    with span("align.dispatch", kind="prf", pairs=b, p=p,
+              shards=n_shards):
+        tags = jax.block_until_ready(fn(*args))
     r_th, r_tl, s_th, s_tl = (np.asarray(t) for t in tags)
     join = lambda th, tl, n: ((th[:n].astype(np.uint64) << np.uint64(32))
                               | tl[:n])

@@ -53,6 +53,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.metrics import Histogram, StatsMixin
+from repro.obs.trace import span
 from repro.train.vfl import make_score_step, pack_slab
 
 __all__ = [
@@ -65,7 +67,7 @@ __all__ = [
 
 
 @dataclasses.dataclass
-class ServeStats:
+class ServeStats(StatsMixin):
     """Measured execution counts for one scoring engine (the serving
     analogue of ``train.vfl.EngineStats``; every field is a
     deterministic function of the request trace + scheduler knobs, so
@@ -74,7 +76,11 @@ class ServeStats:
     ``padded_slots`` counts empty slot-steps (slots × dispatches minus
     occupied), ``occupancy_sum`` the occupied slots summed over
     dispatches — ``mean_occupancy`` is the batch-utilization figure of
-    merit for continuous batching."""
+    merit for continuous batching.
+
+    ``CONTRACT_FIELDS`` (via ``repro.obs.StatsMixin``, DESIGN.md §10)
+    is the exact counter list ``engine_contract.json`` pins per smoke
+    row — declared here so the gate and the benchmark can never drift."""
     dispatches: int = 0
     admitted_rows: int = 0
     padded_slots: int = 0
@@ -84,6 +90,9 @@ class ServeStats:
     forced_splits: int = 0
     slots: int = 0
     bottom_impl: str = "ref"
+
+    CONTRACT_FIELDS = ("dispatches", "admitted_rows", "padded_slots",
+                       "occupancy_sum", "completed", "forced_splits")
 
     @property
     def mean_occupancy(self) -> float:
@@ -205,6 +214,15 @@ class VFLScoringEngine:
         admitted this round."""
         free = [s for s in range(self.slots) if self._slot_req[s] is None]
         admitted = 0
+        sp = span("serve.admit", queued=len(self._queue), free=len(free))
+        with sp:
+            admitted = self._admit_into(free)
+        sp.set(admitted=admitted)
+        self.stats.admitted_rows += admitted
+        return admitted
+
+    def _admit_into(self, free: List[int]) -> int:
+        admitted = 0
         for req in list(self._queue):
             if not free:
                 break
@@ -226,7 +244,6 @@ class VFLScoringEngine:
             admitted += take
             if req.next_row == req.n_rows:
                 self._queue.remove(req)
-        self.stats.admitted_rows += admitted
         return admitted
 
     def dispatch(self) -> List[Tuple[int, np.ndarray]]:
@@ -237,7 +254,10 @@ class VFLScoringEngine:
         occ = [s for s in range(self.slots) if self._slot_req[s] is not None]
         if not occ:
             return []
-        out = np.asarray(self._score(self.packed, jnp.asarray(self._xbuf)))
+        with span("serve.dispatch", occupancy=len(occ), slots=self.slots,
+                  rows=len(occ), bottom_impl=self.stats.bottom_impl):
+            out = np.asarray(self._score(self.packed,
+                                         jnp.asarray(self._xbuf)))
         self.stats.dispatches += 1
         self.stats.occupancy_sum += len(occ)
         self.stats.padded_slots += self.slots - len(occ)
@@ -309,7 +329,9 @@ def score_partition(params, cfg, partition, *, block_b: int = 512,
         buf[:, :e - s, :] = slab[:, s:e, :]
         if e - s < bs:
             buf[:, e - s:, :] = 0.0
-        outs.append(np.asarray(score(packed, jnp.asarray(buf)))[:e - s])
+        with span("serve.dispatch", rows=e - s, slots=bs,
+                  occupancy=e - s, bottom_impl=bottom_impl):
+            outs.append(np.asarray(score(packed, jnp.asarray(buf)))[:e - s])
     return np.concatenate(outs, axis=0)
 
 
@@ -319,13 +341,25 @@ def score_partition(params, cfg, partition, *, block_b: int = 512,
 @dataclasses.dataclass
 class SimReport:
     """One policy's run over one trace: per-request virtual latency,
-    final counters, total virtual makespan and measured wall time."""
+    final counters, total virtual makespan and measured wall time.
+
+    ``service_hist``/``wall_hist`` are the per-dispatch service-time
+    distributions (``repro.obs.Histogram``): ``service_hist`` on the
+    virtual clock (what latency percentiles are built from —
+    deterministic under a fixed ``service_seconds``), ``wall_hist`` the
+    MEASURED wall time of every dispatch, which used to be discarded
+    once totaled.  ``benchmarks/serve_vfl.py`` surfaces both as
+    p50/p99-per-dispatch CSV columns."""
     policy: str
     latencies: Dict[int, float]
     results: Dict[int, np.ndarray]
     stats: ServeStats
     makespan: float
     wall_seconds: float
+    service_hist: Histogram = dataclasses.field(
+        default_factory=lambda: Histogram("serve.service_s"))
+    wall_hist: Histogram = dataclasses.field(
+        default_factory=lambda: Histogram("serve.dispatch_wall_s"))
 
     def percentile(self, q: float) -> float:
         return float(np.percentile(np.asarray(list(self.latencies.values())),
@@ -357,6 +391,8 @@ def simulate_trace(engine: VFLScoringEngine, trace: Sequence[ScoreRequest],
     arrivals: Dict[int, float] = {}
     latencies: Dict[int, float] = {}
     results: Dict[int, np.ndarray] = {}
+    service_hist = Histogram("serve.service_s")
+    wall_hist = Histogram("serve.dispatch_wall_s")
     wall0 = time.perf_counter()
     while True:
         while i < n and trace[i].arrival <= t:
@@ -375,10 +411,13 @@ def simulate_trace(engine: VFLScoringEngine, trace: Sequence[ScoreRequest],
         if fire:
             w0 = time.perf_counter()
             completed = engine.dispatch()
-            dt = time.perf_counter() - w0
+            dt_wall = time.perf_counter() - w0
+            wall_hist.observe(dt_wall)        # measured, no longer discarded
+            dt = dt_wall
             if service_seconds is not None:
                 dt = (service_seconds(occ) if callable(service_seconds)
                       else float(service_seconds))
+            service_hist.observe(dt)          # virtual-clock service time
             t += dt
             for rid, out in completed:
                 latencies[rid] = t - arrivals[rid]
@@ -391,4 +430,5 @@ def simulate_trace(engine: VFLScoringEngine, trace: Sequence[ScoreRequest],
             continue
     return SimReport(policy=policy, latencies=latencies, results=results,
                      stats=engine.stats, makespan=t,
-                     wall_seconds=time.perf_counter() - wall0)
+                     wall_seconds=time.perf_counter() - wall0,
+                     service_hist=service_hist, wall_hist=wall_hist)

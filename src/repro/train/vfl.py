@@ -63,6 +63,8 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.kernels.padding import round_up
+from repro.obs.metrics import StatsMixin
+from repro.obs.trace import span
 from repro.sharding import padded_rows, resolve_train_mesh, spec_shard_map
 from repro.train.optimizer import adam_init, adam_update
 
@@ -70,7 +72,7 @@ from repro.train.optimizer import adam_init, adam_update
 
 
 @dataclasses.dataclass
-class EngineStats:
+class EngineStats(StatsMixin):
     """Measured execution counts for one training run.
 
     ``dispatches`` counts compiled-function invocations in the timed
@@ -80,6 +82,10 @@ class EngineStats:
     compile/warm-up dispatch before the timed region is excluded.
     ``shards``/``model_shards`` are the (data, model) mesh-axis sizes
     the run sharded over (1 = unsharded).
+
+    ``StatsMixin`` (DESIGN.md §10) supplies ``to_dict``/``as_row`` and
+    ``emit(registry)``; ``CONTRACT_FIELDS`` names the raw counters the
+    CI perf contract derives its per-epoch ratios from.
     """
     dispatches: int = 0
     host_syncs: int = 0
@@ -90,6 +96,8 @@ class EngineStats:
     bottom_impl: str = "ref"
     model_shards: int = 1
     fused_gather: bool = False
+
+    CONTRACT_FIELDS = ("dispatches", "host_syncs", "steps_per_epoch")
 
 
 @dataclasses.dataclass
@@ -507,7 +515,10 @@ def train_scan(partition, cfg, *, sample_weights: Optional[np.ndarray] = None,
     idx0, mask0 = epoch_schedule(np.arange(n), n, bs, steps_per_epoch,
                                  padded_bs)
     params, opt = pin_carry(params, opt)
-    jax.block_until_ready(jitted(params, opt, idx0, mask0, *arrays))
+    with span("train.compile", engine="scan", bottom_impl=bottom_impl,
+              steps_per_epoch=steps_per_epoch, padded_batch=padded_bs,
+              mesh=(n_data, n_model), fused_gather=use_slab and fuse_gather):
+        jax.block_until_ready(jitted(params, opt, idx0, mask0, *arrays))
     params = fresh_params()
     params, opt = pin_carry(params, adam_init(params))
 
@@ -525,10 +536,16 @@ def train_scan(partition, cfg, *, sample_weights: Optional[np.ndarray] = None,
     for epoch in range(1, cfg.max_epochs + 1):
         order = rng.permutation(n)
         idx, mask = epoch_schedule(order, n, bs, steps_per_epoch, padded_bs)
-        params, opt, ep_loss = jitted(params, opt, idx, mask, *arrays)
-        stats.dispatches += 1
-        losses.append(float(ep_loss))   # the single host sync this epoch
-        stats.host_syncs += 1
+        # the epoch span brackets the ONE dispatch + ONE host sync; it
+        # reads the host clock only, so the engine's dispatch/sync
+        # contract is identical traced or not (tests/test_obs.py)
+        with span("train.epoch", epoch=epoch, engine="scan",
+                  steps=steps_per_epoch, comm_bytes=per_sample * n) as sp:
+            params, opt, ep_loss = jitted(params, opt, idx, mask, *arrays)
+            stats.dispatches += 1
+            losses.append(float(ep_loss))  # the single host sync this epoch
+            stats.host_syncs += 1
+            sp.set(loss=losses[-1])
         total_steps += steps_per_epoch
         comm_bytes += per_sample * n    # every row trains, remainder too
         if verbose and epoch % 10 == 0:
@@ -597,15 +614,17 @@ def train_loop(partition, cfg, *, sample_weights: Optional[np.ndarray] = None,
     for epoch in range(1, cfg.max_epochs + 1):
         order = rng.permutation(n)
         ep_loss, nb = 0.0, 0
-        for s in range(0, n, bs):
-            idx = jnp.asarray(order[s:s + bs])
-            params, opt, loss = step(params, opt, idx)
-            stats.dispatches += 1
-            ep_loss += float(loss)          # blocking sync EVERY step
-            stats.host_syncs += 1
-            nb += 1
-            total_steps += 1
-            comm_bytes += per_sample * int(idx.shape[0])
+        with span("train.epoch", epoch=epoch, engine="loop") as sp:
+            for s in range(0, n, bs):
+                idx = jnp.asarray(order[s:s + bs])
+                params, opt, loss = step(params, opt, idx)
+                stats.dispatches += 1
+                ep_loss += float(loss)          # blocking sync EVERY step
+                stats.host_syncs += 1
+                nb += 1
+                total_steps += 1
+                comm_bytes += per_sample * int(idx.shape[0])
+            sp.set(steps=nb)
         losses.append(ep_loss / max(nb, 1))
         if verbose and epoch % 10 == 0:
             print(f"  epoch {epoch}: loss {losses[-1]:.5f}")
