@@ -32,10 +32,11 @@ from __future__ import annotations
 
 import argparse
 import csv
-import json
 import os
 import sys
 
+from repro.analysis.contracts import (diff_rows, load_contract,
+                                      rows_to_doc, write_contract)
 from repro.serve.vfl import ServeStats
 
 DEFAULT_CSV = os.path.join("experiments", "bench", "table2_e2e.csv")
@@ -93,33 +94,14 @@ def load_serve_rows(csv_path: str) -> dict:
     return rows
 
 
-def _diff(contract: dict, got: dict, csv_path: str, failures: list) -> None:
-    for key, expect in contract.items():
-        if key not in got:
-            failures.append(f"{key}: row missing from {csv_path}")
-            continue
-        for field, want in expect.items():
-            have = got[key].get(field)
-            if have != want:
-                failures.append(
-                    f"{key}: {field} = {have!r}, contract pins {want!r}")
-    for key in got:
-        if key not in contract:
-            failures.append(f"{key}: row not covered by the contract — "
-                            f"regenerate with --write if intended")
-
-
 def check(csv_path: str = DEFAULT_CSV,
           contract_path: str = DEFAULT_CONTRACT,
           serve_csv_path: str = DEFAULT_SERVE_CSV) -> int:
-    with open(contract_path) as f:
-        doc = json.load(f)
-    contract = {tuple(r[k] for k in KEY): r["counters"]
-                for r in doc["rows"]}
+    contract = load_contract(contract_path, KEY)
     failures = []
-    _diff(contract, load_rows(csv_path), csv_path, failures)
-    serve_contract = {tuple(r[k] for k in SERVE_KEY): r["counters"]
-                      for r in doc.get("serve_rows", [])}
+    diff_rows(contract, load_rows(csv_path), csv_path, failures)
+    serve_contract = load_contract(contract_path, SERVE_KEY,
+                                   rows_key="serve_rows")
     n_serve = len(serve_contract)
     if serve_contract:
         if not os.path.exists(serve_csv_path):
@@ -127,8 +109,8 @@ def check(csv_path: str = DEFAULT_CSV,
                 f"serve rows pinned but {serve_csv_path} missing — run "
                 f"benchmarks.serve_vfl.run_smoke() before the gate")
         else:
-            _diff(serve_contract, load_serve_rows(serve_csv_path),
-                  serve_csv_path, failures)
+            diff_rows(serve_contract, load_serve_rows(serve_csv_path),
+                      serve_csv_path, failures)
     if failures:
         print(f"ENGINE CONTRACT VIOLATED ({len(failures)} finding(s)):")
         for f_ in failures:
@@ -142,8 +124,7 @@ def check(csv_path: str = DEFAULT_CSV,
 def write(csv_path: str = DEFAULT_CSV,
           contract_path: str = DEFAULT_CONTRACT,
           serve_csv_path: str = DEFAULT_SERVE_CSV) -> int:
-    rows = [{**dict(zip(KEY, key)), "counters": counters}
-            for key, counters in sorted(load_rows(csv_path).items())]
+    rows = rows_to_doc(load_rows(csv_path), KEY)
     doc = {
         "source": "benchmarks.table2_framework.run_e2e(smoke=True)",
         "note": "execution-count invariants only (no wall times); "
@@ -153,18 +134,15 @@ def write(csv_path: str = DEFAULT_CSV,
     }
     n_serve = 0
     if os.path.exists(serve_csv_path):
-        serve_rows = [{**dict(zip(SERVE_KEY, key)), "counters": counters}
-                      for key, counters
-                      in sorted(load_serve_rows(serve_csv_path).items())]
+        serve_rows = rows_to_doc(load_serve_rows(serve_csv_path),
+                                 SERVE_KEY)
         doc["serve_source"] = "benchmarks.serve_vfl.run_smoke()"
         doc["serve_rows"] = serve_rows
         n_serve = len(serve_rows)
     else:
         print(f"note: {serve_csv_path} missing — writing contract "
               f"WITHOUT serve rows")
-    with open(contract_path, "w") as f:
-        json.dump(doc, f, indent=2)
-        f.write("\n")
+    write_contract(contract_path, doc)
     print(f"wrote {len(rows)} train + {n_serve} serve contract row(s) "
           f"-> {contract_path}")
     return 0

@@ -21,7 +21,19 @@ def main() -> None:
     ap.add_argument("--only", default="",
                     help="comma-list: fig7,table2,table2e2e,fig45,fig6,"
                          "serve,roofline")
+    ap.add_argument("--static", action="store_true",
+                    help="skip the dynamic sweep; run the static program "
+                         "census (repro.analysis.check --census-only) and "
+                         "emit experiments/bench/static_census.csv next "
+                         "to the dynamic CSVs")
     args = ap.parse_args()
+    if args.static:
+        # before any benchmark module import so the check can still set
+        # XLA_FLAGS for its 8 virtual devices prior to the jax import
+        from repro.analysis import check as static_check
+        sys.exit(static_check.main(
+            ["--census-only",
+             "--census-csv", "experiments/bench/static_census.csv"]))
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
 

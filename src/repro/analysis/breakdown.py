@@ -5,6 +5,7 @@ the §Perf profiling companion to hlo_cost.analyze_hlo.
 """
 from __future__ import annotations
 
+import re
 import sys
 from collections import Counter
 from typing import Dict
@@ -64,10 +65,21 @@ def breakdown(hlo_text: str):
         out_shapes = hc._shapes_in(out_frag)
         after = raw[raw.index(opcode + "(") + len(opcode) + 1:]
         frag = after.split(")")[0]
-        onames = [t.strip().lstrip("%") for t in frag.split(",") if t.strip()]
+        # operands print either shape-annotated ("f32[8,16]{1,0} %x") or
+        # as bare names — prefer the inline shape, fall back to the
+        # symbol table (same policy as hlo_cost.analyze_hlo)
         op_shapes = []
-        for on in onames:
-            op_shapes += symtab.get(cur, {}).get(on, [])
+        for tok in hc._split_top_commas(frag):
+            tok = tok.strip()
+            if not tok:
+                continue
+            inline = hc._shapes_in(tok)
+            if inline:
+                op_shapes += inline
+                continue
+            nm = re.search(r"%?([\w.\-]+)\s*$", tok)
+            if nm:
+                op_shapes += symtab.get(cur, {}).get(nm.group(1), [])
         b = (hc._nbytes(out_shapes) + hc._nbytes(op_shapes)) * w
         key = f"{opcode} -> {out_frag.split('{')[0].strip()[:48]}"
         by_bytes[key] += b
@@ -83,17 +95,37 @@ def breakdown(hlo_text: str):
     return by_bytes, by_flops
 
 
-def main() -> None:
-    path = sys.argv[1]
-    n = int(sys.argv[2]) if len(sys.argv) > 2 else 15
-    by_bytes, by_flops = breakdown(open(path).read())
+def main(argv=None) -> int:
+    """Exit 2 on an unreadable file, 1 when the text has no ENTRY
+    computation (not an HLO dump), 0 with the tables printed."""
+    import argparse
+    ap = argparse.ArgumentParser(
+        prog="repro.analysis.breakdown",
+        description="per-opcode/per-shape byte and flop breakdown of "
+                    "an optimized HLO text dump")
+    ap.add_argument("hlo", help="path to a compiled.as_text() dump")
+    ap.add_argument("top", nargs="?", type=int, default=15,
+                    help="rows per table (default 15)")
+    args = ap.parse_args(argv)
+    try:
+        with open(args.hlo) as f:
+            text = f.read()
+    except OSError as e:
+        print(f"error: cannot read {args.hlo}: {e}")
+        return 2
+    if "ENTRY" not in text:
+        print(f"error: {args.hlo} has no ENTRY computation — "
+              "not an optimized HLO dump")
+        return 1
+    by_bytes, by_flops = breakdown(text)
     print("== top byte movers (GB, trip-weighted) ==")
-    for k, v in by_bytes.most_common(n):
+    for k, v in by_bytes.most_common(args.top):
         print(f"{v/1e9:10.1f}  {k}")
     print("\n== top flop ops (GFLOP) ==")
-    for k, v in by_flops.most_common(n):
+    for k, v in by_flops.most_common(args.top):
         print(f"{v/1e9:10.1f}  {k}")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -74,3 +74,42 @@ def collective_bytes(hlo_text: str) -> int:
 
 def count_op(hlo_text: str, opname: str) -> int:
     return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))
+
+
+# ------------------------------------------------- StableHLO extensions
+# ``jax.jit(...).lower().as_text()`` is StableHLO (MLIR), not
+# optimized HLO: collectives print as ``stablehlo.all_gather`` ops and
+# jit-level buffer donation prints as a ``tf.aliasing_output`` argument
+# attribute.  The static census (repro.analysis.census) parses these
+# pre-compile spellings; the post-SPMD parser above keeps serving the
+# roofline/byte accounting on compiled modules.
+
+# stablehlo collective op -> the optimized-HLO kind name used above
+_STABLEHLO_COLLECTIVES = {
+    "all_gather": "all-gather",
+    "all_reduce": "all-reduce",
+    "reduce_scatter": "reduce-scatter",
+    "all_to_all": "all-to-all",
+    "collective_permute": "collective-permute",
+}
+
+_STABLEHLO_OP_RE = re.compile(
+    r'"?stablehlo\.(' + "|".join(_STABLEHLO_COLLECTIVES) + r')"?\b')
+
+_ALIAS_RE = re.compile(r"tf\.aliasing_output")
+
+
+def count_stablehlo_collectives(text: str) -> Dict[str, int]:
+    """{optimized-HLO kind name: count} over a lowered StableHLO module
+    — the pre-compile cross-check of ``parse_hlo_collectives``."""
+    out: Dict[str, int] = defaultdict(int)
+    for m in _STABLEHLO_OP_RE.finditer(text):
+        out[_STABLEHLO_COLLECTIVES[m.group(1)]] += 1
+    return dict(out)
+
+
+def count_aliased_args(text: str) -> int:
+    """Number of donated (input→output aliased) arguments in a lowered
+    StableHLO module: jit's ``donate_argnums`` survive lowering as
+    ``tf.aliasing_output`` argument attributes."""
+    return len(_ALIAS_RE.findall(text))

@@ -260,3 +260,36 @@ def analyze_hlo(hlo_text: str) -> Dict[str, float]:
 
     f, b = total(entry, False)
     return {"flops": f, "bytes": b}
+
+
+def main(argv=None) -> int:
+    """``python -m repro.analysis.hlo_cost <hlo.txt>`` — print the
+    trip-weighted flop/byte totals of an optimized-HLO dump.  Exit 2 on
+    an unreadable file, 1 when the text has no ENTRY computation (not an
+    HLO dump), 0 with the totals printed."""
+    import argparse
+    ap = argparse.ArgumentParser(
+        prog="repro.analysis.hlo_cost",
+        description="while-trip-aware flop/byte totals for an "
+                    "optimized HLO text dump")
+    ap.add_argument("hlo", help="path to a compiled.as_text() dump")
+    args = ap.parse_args(argv)
+    try:
+        with open(args.hlo) as f:
+            text = f.read()
+    except OSError as e:
+        print(f"error: cannot read {args.hlo}: {e}")
+        return 2
+    if "ENTRY" not in text:
+        print(f"error: {args.hlo} has no ENTRY computation — "
+              "not an optimized HLO dump")
+        return 1
+    cost = analyze_hlo(text)
+    print(f"flops {cost['flops']:.6g}")
+    print(f"bytes {cost['bytes']:.6g}")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

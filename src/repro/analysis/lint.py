@@ -1,0 +1,384 @@
+"""Repo-specific AST lint for the engine modules.
+
+Pure ``ast`` — importable (and runnable) without jax, so the lint layer
+of ``repro.analysis.check`` works even where the census layer can't
+trace programs.  Four rules, each encoding a contract this repo has
+already been bitten by:
+
+``host-sync``
+    ``float()`` / ``np.asarray()`` / ``.block_until_ready()`` /
+    ``jax.device_get()`` applied inside a *traced* function.  Each one
+    forces a device→host transfer per call; inside the epoch scan or a
+    shard_map body that silently breaks the ONE-host-sync-per-epoch
+    engine contract.  Traced functions are detected statically: defs
+    decorated with ``jax.jit``, functions passed to
+    ``jit``/``vmap``/``pmap``/``grad``/``value_and_grad``/``scan``/
+    ``shard_map``/``spec_shard_map``/``batch_shard_map``/``custom_vjp``,
+    defs nested inside those, and same-module functions they call.
+
+``call-time-jit``
+    ``jax.jit(...)`` evaluated inside a function body.  A fresh jit
+    wrapper per call means a fresh compile-cache entry per call — the
+    recompile hazard the scan engine exists to avoid.  Module-level
+    wrappers and ``lru_cache``-decorated factories (the blessed
+    pattern) are exempt.
+
+``unbounded-cache``
+    ``lru_cache(maxsize=None)`` / ``functools.cache``.  Unbounded
+    caches keyed on ``Mesh`` objects pin device meshes (and their
+    buffers) for process lifetime across tests.
+
+``bitwise-reassoc``
+    ``jnp.sum`` over a Python list, or any ``jnp.sum`` inside a
+    function whose docstring declares a bitwise contract.  Python's
+    builtin ``sum()`` is a deterministic left fold; ``jnp.sum`` over a
+    stacked list re-associates under XLA and breaks bitwise claims.
+
+Suppression: a finding on line L is suppressed by ``# lint-ok: <rule>``
+(with an optional ``(reason)``) on line L or L-1.  Findings may also be
+accepted via a JSON baseline: a list of ``{"rule", "path", "symbol"}``
+entries (line numbers deliberately excluded — they drift).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+RULES = ("host-sync", "call-time-jit", "unbounded-cache",
+         "bitwise-reassoc")
+
+_SUPPRESS_RE = re.compile(r"#\s*lint-ok:\s*([a-z-]+)")
+
+# entry points whose function-valued arguments become traced code
+_TRACING_ENTRY_POINTS = {
+    "jit", "vmap", "pmap", "grad", "value_and_grad", "checkpoint",
+    "remat", "scan", "shard_map", "spec_shard_map", "batch_shard_map",
+    "custom_vjp", "custom_jvp", "while_loop", "fori_loop", "cond",
+    "switch", "defvjp",
+}
+
+_HOST_SYNC_CALLS = {"float", "int", "bool"}
+_HOST_SYNC_ATTRS = {"block_until_ready", "item", "tolist"}
+_HOST_SYNC_QUALIFIED = {("np", "asarray"), ("numpy", "asarray"),
+                        ("np", "array"), ("numpy", "array"),
+                        ("jax", "device_get"), ("onp", "asarray")}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    symbol: str          # enclosing function qualname ('' at module level)
+    message: str
+
+    def key(self) -> Tuple[str, str, str]:
+        return (self.rule, self.path, self.symbol)
+
+    def as_dict(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+    def render(self) -> str:
+        where = f"{self.path}:{self.line}"
+        sym = f" [{self.symbol}]" if self.symbol else ""
+        return f"{where}: {self.rule}{sym}: {self.message}"
+
+
+def _attr_chain(node: ast.AST) -> Tuple[str, ...]:
+    """('jax','lax','scan') for jax.lax.scan; () if not a pure chain."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return ()
+
+
+def _call_name(node: ast.Call) -> Tuple[str, ...]:
+    return _attr_chain(node.func)
+
+
+def _is_jit_call(chain: Tuple[str, ...]) -> bool:
+    return bool(chain) and chain[-1] == "jit" and (
+        len(chain) == 1 or chain[0] in ("jax", "repro"))
+
+
+def _is_cache_decorator(dec: ast.AST) -> bool:
+    chain = _attr_chain(dec.func if isinstance(dec, ast.Call) else dec)
+    return bool(chain) and chain[-1] in ("lru_cache", "cache")
+
+
+class _FunctionIndex(ast.NodeVisitor):
+    """Collects every def with its qualname, parent, decorators, and the
+    bare names it is referenced by (for traced-propagation)."""
+
+    def __init__(self) -> None:
+        self.funcs: Dict[str, ast.FunctionDef] = {}
+        self.parents: Dict[str, Optional[str]] = {}
+        self.by_name: Dict[str, List[str]] = {}
+        self._stack: List[str] = []
+
+    def _visit_def(self, node) -> None:
+        qual = ".".join(self._stack + [node.name])
+        self.funcs[qual] = node
+        self.parents[qual] = ".".join(self._stack) or None
+        self.by_name.setdefault(node.name, []).append(qual)
+        self._stack.append(node.name)
+        self.generic_visit(node)
+        self._stack.pop()
+
+    visit_FunctionDef = _visit_def
+    visit_AsyncFunctionDef = _visit_def
+
+    def visit_ClassDef(self, node) -> None:
+        self._stack.append(node.name)
+        self.generic_visit(node)
+        self._stack.pop()
+
+
+def _traced_seeds(tree: ast.Module, index: _FunctionIndex) -> Set[str]:
+    """Function qualnames that jax will trace: jit-decorated defs plus
+    any function whose bare name is passed to a tracing entry point."""
+    seeds: Set[str] = set()
+    for qual, fn in index.funcs.items():
+        for dec in fn.decorator_list:
+            target = dec.func if isinstance(dec, ast.Call) else dec
+            chain = _attr_chain(target)
+            if chain and chain[-1] in _TRACING_ENTRY_POINTS:
+                seeds.add(qual)
+            if isinstance(dec, ast.Call):
+                for arg in list(dec.args) + [k.value for k in dec.keywords]:
+                    achain = _attr_chain(arg)
+                    if achain and achain[-1] in _TRACING_ENTRY_POINTS:
+                        seeds.add(qual)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        chain = _call_name(node)
+        if not chain or chain[-1] not in _TRACING_ENTRY_POINTS:
+            continue
+        for arg in list(node.args) + [k.value for k in node.keywords]:
+            if isinstance(arg, ast.Name) and arg.id in index.by_name:
+                seeds.update(index.by_name[arg.id])
+    return seeds
+
+
+def _propagate_traced(index: _FunctionIndex, seeds: Set[str]) -> Set[str]:
+    """Close the traced set over (a) defs nested inside traced defs and
+    (b) same-module functions a traced function calls by bare name."""
+    traced = set(seeds)
+    changed = True
+    while changed:
+        changed = False
+        for qual in list(index.funcs):
+            if qual in traced:
+                continue
+            parent = index.parents.get(qual)
+            if parent in traced:
+                traced.add(qual)
+                changed = True
+        for qual in list(traced):
+            fn = index.funcs.get(qual)
+            if fn is None:
+                continue
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Call) and \
+                        isinstance(node.func, ast.Name):
+                    for callee in index.by_name.get(node.func.id, ()):
+                        if callee not in traced:
+                            traced.add(callee)
+                            changed = True
+    return traced
+
+
+def _enclosing(index: _FunctionIndex, lineno: int) -> str:
+    """Qualname of the innermost def spanning ``lineno`` ('' if none)."""
+    best, best_span = "", None
+    for qual, fn in index.funcs.items():
+        end = getattr(fn, "end_lineno", fn.lineno)
+        if fn.lineno <= lineno <= end:
+            span = end - fn.lineno
+            if best_span is None or span < best_span:
+                best, best_span = qual, span
+    return best
+
+
+def _suppressed(lines: Sequence[str], lineno: int, rule: str) -> bool:
+    for ln in (lineno, lineno - 1):
+        if 1 <= ln <= len(lines):
+            m = _SUPPRESS_RE.search(lines[ln - 1])
+            if m and m.group(1) == rule:
+                return True
+    return False
+
+
+def lint_source(source: str, path: str) -> List[Finding]:
+    """All unsuppressed findings in one module's source text."""
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Finding("syntax-error", path, e.lineno or 0, "",
+                        f"cannot parse: {e.msg}")]
+    lines = source.splitlines()
+    index = _FunctionIndex()
+    index.visit(tree)
+    traced = _propagate_traced(index, _traced_seeds(tree, index))
+    findings: List[Finding] = []
+
+    def add(rule: str, lineno: int, msg: str) -> None:
+        if not _suppressed(lines, lineno, rule):
+            findings.append(
+                Finding(rule, path, lineno, _enclosing(index, lineno), msg))
+
+    bitwise_funcs = {
+        qual for qual, fn in index.funcs.items()
+        if "bitwise" in (ast.get_docstring(fn) or "").lower()}
+
+    def _ancestors(ix: _FunctionIndex, qual: str):
+        parent = ix.parents.get(qual)
+        while parent:
+            yield parent
+            parent = ix.parents.get(parent)
+
+    def _under_cached_factory(qual: str) -> bool:
+        return any(
+            p in index.funcs and any(
+                _is_cache_decorator(d)
+                for d in index.funcs[p].decorator_list)
+            for p in _ancestors(index, qual))
+
+    for qual, fn in index.funcs.items():
+        for dec in fn.decorator_list:
+            chain = _attr_chain(dec)
+            # unbounded-cache, bare-decorator form: @functools.cache (an
+            # Attribute, so only visible on decorator lists — the Call
+            # form is caught in the general walk below)
+            if chain == ("functools", "cache"):
+                add("unbounded-cache", dec.lineno,
+                    "functools.cache has no maxsize bound — pins every "
+                    "key (incl. Mesh objects) for process lifetime")
+            # call-time-jit, decorator form: @jax.jit on a def nested
+            # inside a plain function — a fresh wrapper (and compile
+            # cache) per enclosing call
+            nested_in_fn = any(
+                p in index.funcs
+                for p in _ancestors(index, qual))
+            if _is_jit_call(chain) and nested_in_fn \
+                    and not _under_cached_factory(qual):
+                add("call-time-jit", dec.lineno,
+                    f"@jit on nested def '{qual}' rebuilds the wrapper "
+                    "(and recompiles) on every enclosing call; hoist to "
+                    "module level or an lru_cache'd factory")
+
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        chain = _call_name(node)
+
+        # unbounded-cache, call form: lru_cache(maxsize=None) /
+        # lru_cache(None) (decorator expressions are Calls too)
+        if chain and chain[-1] == "lru_cache":
+            unbounded = any(
+                k.arg == "maxsize" and isinstance(k.value, ast.Constant)
+                and k.value.value is None for k in node.keywords) or any(
+                isinstance(a, ast.Constant) and a.value is None
+                for a in node.args)
+            if unbounded:
+                add("unbounded-cache", node.lineno,
+                    f"{'.'.join(chain)}(maxsize=None) — pins every key "
+                    "(incl. Mesh objects) for process lifetime")
+
+        # call-time-jit: jax.jit evaluated inside a function body that is
+        # not an lru_cache'd factory
+        if _is_jit_call(chain):
+            encl = _enclosing(index, node.lineno)
+            if encl:
+                fn = index.funcs[encl]
+                cached_factory = any(
+                    _is_cache_decorator(d) for d in fn.decorator_list
+                ) or _under_cached_factory(encl)
+                if not cached_factory:
+                    add("call-time-jit", node.lineno,
+                        "jax.jit created at call time — every invocation "
+                        "builds a fresh wrapper and recompiles; hoist to "
+                        "module level or an lru_cache'd factory")
+
+        # host-sync: only inside statically-traced functions
+        encl = _enclosing(index, node.lineno)
+        if encl in traced:
+            hit = None
+            if len(chain) == 1 and chain[0] in _HOST_SYNC_CALLS \
+                    and node.args and not isinstance(
+                        node.args[0], ast.Constant):
+                hit = chain[0]
+            elif len(chain) >= 2 and (chain[0], chain[-1]) in \
+                    _HOST_SYNC_QUALIFIED:
+                hit = ".".join(chain)
+            elif isinstance(node.func, ast.Attribute) and \
+                    node.func.attr in _HOST_SYNC_ATTRS:
+                hit = f".{node.func.attr}()"
+            if hit:
+                add("host-sync", node.lineno,
+                    f"{hit} on a traced value inside traced function "
+                    f"'{encl}' forces a device->host sync per call")
+
+        # bitwise-reassoc: jnp.sum over a list, or jnp.sum in a function
+        # whose docstring declares a bitwise contract
+        if chain and chain[-1] == "sum" and len(chain) >= 2 and \
+                chain[0] in ("jnp", "jax"):
+            over_list = bool(node.args) and isinstance(
+                node.args[0], (ast.List, ast.ListComp))
+            in_bitwise = _enclosing(index, node.lineno) in bitwise_funcs
+            if over_list or in_bitwise:
+                why = ("over a Python list" if over_list
+                       else "inside a bitwise-contract function")
+                add("bitwise-reassoc", node.lineno,
+                    f"jnp.sum {why} re-associates under XLA; use the "
+                    "builtin sum() left fold to keep bitwise claims")
+
+    return findings
+
+
+def lint_paths(paths: Iterable[Path]) -> List[Finding]:
+    findings: List[Finding] = []
+    for p in sorted(paths):
+        findings.extend(
+            lint_source(p.read_text(), str(p)))
+    return findings
+
+
+def iter_source_files(root: Path) -> List[Path]:
+    return [p for p in sorted(root.rglob("*.py"))
+            if "__pycache__" not in p.parts]
+
+
+def load_baseline(path: Path) -> List[Dict[str, str]]:
+    if not path.exists():
+        return []
+    data = json.loads(path.read_text())
+    if not isinstance(data, list):
+        raise ValueError(f"baseline {path} must be a JSON list")
+    return data
+
+
+def split_baselined(findings: Sequence[Finding],
+                    baseline: Sequence[Dict[str, str]]
+                    ) -> Tuple[List[Finding], List[Finding]]:
+    """(new, accepted): a finding is accepted if some baseline entry
+    matches its (rule, path-suffix, symbol)."""
+    def matches(f: Finding, b: Dict[str, str]) -> bool:
+        return (f.rule == b.get("rule")
+                and f.path.endswith(b.get("path", ""))
+                and f.symbol == b.get("symbol", f.symbol))
+
+    new, accepted = [], []
+    for f in findings:
+        (accepted if any(matches(f, b) for b in baseline)
+         else new).append(f)
+    return new, accepted

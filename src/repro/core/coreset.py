@@ -248,6 +248,9 @@ def _batched_local_clusterings(features: Sequence[np.ndarray], k: int, *,
     if mesh is not None:
         fn = batch_shard_map(fit_batch, mesh, axis)
         args, _ = pad_batch_rows(args, n_shards)
+    # deliberate AOT lower/compile: shapes and shard wrapping vary per
+    # call, a cached wrapper would not help
+    # lint-ok: call-time-jit (AOT compile, shapes vary per call)
     compiled = jax.jit(fn).lower(*args).compile()
     t0 = time.perf_counter()
     cents, assign, sqd = jax.block_until_ready(compiled(*args))

@@ -54,6 +54,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
     try:
         with use_mesh(mesh):
             fn, aargs, in_sh, out_sh = build_dryrun(cfg, shape, mesh)
+            # lint-ok: call-time-jit (one-shot AOT compile probe per run)
             jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
             lowered = jfn.lower(*aargs)
             t_lower = time.perf_counter() - t0

@@ -47,6 +47,7 @@ def main() -> None:
         p_sh = param_shardings(params, mesh)
         params = jax.device_put(params, p_sh)
         opt = adam_init(params)
+        # lint-ok: call-time-jit (one wrapper per process entry point)
         step_fn = jax.jit(make_train_step(cfg, lr=args.lr,
                                           unroll=cfg.moe is not None))
 

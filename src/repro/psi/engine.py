@@ -180,15 +180,27 @@ _DISPATCH_BODY = {"prf": _prf_batch, "merge": _merge_batch,
                   "single": _oprf_single}
 
 
-@functools.lru_cache(maxsize=None)
+@functools.lru_cache(maxsize=32)
 def _dispatch(kind: str, impl: str, mesh=None, axis: Optional[str] = None):
     """Jitted executable for one dispatch kind, optionally shard_mapped
     so the pair batch splits over a mesh axis.  Cached per
-    (kind, impl, mesh, axis) so re-wrapping never re-jits."""
+    (kind, impl, mesh, axis) so re-wrapping never re-jits; bounded (and
+    clearable via ``clear_dispatch_cache``) because the mesh-keyed
+    entries would otherwise pin Mesh objects and their executables for
+    process lifetime."""
     fn = functools.partial(_DISPATCH_BODY[kind], impl=impl)
     if mesh is not None:
         fn = batch_shard_map(fn, mesh, axis)
     return jax.jit(fn)
+
+
+def clear_dispatch_cache() -> None:
+    """Drop every cached dispatch executable and the warm-up record.
+    Tests that build transient meshes call this so the engine's cache
+    keys don't keep device meshes alive; the paired training-side hook
+    is ``repro.train.vfl.clear_program_caches``."""
+    _dispatch.cache_clear()
+    _warm_cache.clear()
 
 
 # ----------------------------------------------------- compile warm-up

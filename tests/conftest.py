@@ -7,6 +7,18 @@ def rng():
     return np.random.default_rng(0)
 
 
+@pytest.fixture(scope="session", autouse=True)
+def _release_program_caches():
+    """Drop the bounded jitted-program caches when the suite finishes so
+    Mesh objects (and their executables) cached during mesh tests don't
+    outlive the session."""
+    yield
+    from repro.psi.engine import clear_dispatch_cache
+    from repro.train.vfl import clear_program_caches
+    clear_dispatch_cache()
+    clear_program_caches()
+
+
 def make_cls_partition(n=600, d=12, classes=2, clients=3, seed=0,
                        margin=3.0):
     """Separable gaussian-mixture dataset, vertically partitioned."""

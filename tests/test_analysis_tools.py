@@ -1,0 +1,314 @@
+"""Unit tests for the static-analysis toolbox: the HLO cost/breakdown
+CLIs (golden fixtures + exit codes), roofline math, the AST lint rules,
+and the BlockSpec VMEM estimators.  Everything here is jax-free except
+the estimators' padding import — no tracing, no devices."""
+import json
+
+import pytest
+
+from repro.analysis import hlo as hlo_mod
+from repro.analysis import breakdown, hlo_cost
+from repro.analysis.roofline import HW, roofline_terms
+
+# ------------------------------------------------------------- fixtures
+
+# minimal optimized-HLO dump: one dot. flops = 2·|out|·K = 2·(8·32)·16
+# = 8192; bytes = out 1024 + operands 512 + 2048 = 3584.
+DOT_HLO = """\
+HloModule m
+
+ENTRY %main (Arg_0.1: f32[8,16], Arg_1.2: f32[16,32]) -> f32[8,32] {
+  %Arg_0.1 = f32[8,16]{1,0} parameter(0)
+  %Arg_1.2 = f32[16,32]{1,0} parameter(1)
+  ROOT %dot.3 = f32[8,32]{1,0} dot(f32[8,16]{1,0} %Arg_0.1, f32[16,32]{1,0} %Arg_1.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+# while loop with a static trip count: body flops (1 + 64) and cond
+# flops (1) must be multiplied by known_trip_count=10 → 660 total.
+WHILE_HLO = """\
+HloModule m2
+
+%body (p: (s32[], f32[64])) -> (s32[], f32[64]) {
+  %p = (s32[], f32[64]) parameter(0)
+  %i = s32[] get-tuple-element((s32[], f32[64]) %p), index=0
+  %x = f32[64]{0} get-tuple-element((s32[], f32[64]) %p), index=1
+  %one = s32[] constant(1)
+  %ni = s32[] add(s32[] %i, s32[] %one)
+  %nx = f32[64]{0} add(f32[64]{0} %x, f32[64]{0} %x)
+  ROOT %t = (s32[], f32[64]) tuple(s32[] %ni, f32[64]{0} %nx)
+}
+
+%cond (p.1: (s32[], f32[64])) -> pred[] {
+  %p.1 = (s32[], f32[64]) parameter(0)
+  %i.1 = s32[] get-tuple-element((s32[], f32[64]) %p.1), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(s32[] %i.1, s32[] %n), direction=LT
+}
+
+ENTRY %main (a: f32[64]) -> f32[64] {
+  %a = f32[64]{0} parameter(0)
+  %z = s32[] constant(0)
+  %init = (s32[], f32[64]) tuple(s32[] %z, f32[64]{0} %a)
+  %w = (s32[], f32[64]) while((s32[], f32[64]) %init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+  ROOT %out = f32[64]{0} get-tuple-element((s32[], f32[64]) %w), index=1
+}
+"""
+
+COLLECTIVE_HLO = """\
+  %ag = f32[16,128]{1,0} all-gather(f32[2,128]{1,0} %x), dimensions={0}
+  %ar = f32[64]{0} all-reduce(f32[64]{0} %y), to_apply=%sum
+"""
+
+STABLEHLO = """\
+  func.func public @main(%arg0: tensor<8xf32> {tf.aliasing_output = 0 : i32}, %arg1: tensor<8xf32> {tf.aliasing_output = 1 : i32}) -> tensor<8xf32> {
+    %0 = "stablehlo.all_gather"(%arg0) : (tensor<8xf32>) -> tensor<64xf32>
+    %1 = "stablehlo.reduce_scatter"(%0) : (tensor<64xf32>) -> tensor<8xf32>
+"""
+
+
+# ------------------------------------------------------- hlo_cost golden
+
+
+def test_hlo_cost_dot_golden():
+    cost = hlo_cost.analyze_hlo(DOT_HLO)
+    assert cost["flops"] == pytest.approx(8192.0)
+    assert cost["bytes"] == pytest.approx(3584.0)
+
+
+def test_hlo_cost_while_trip_weighting():
+    cost = hlo_cost.analyze_hlo(WHILE_HLO)
+    assert cost["flops"] == pytest.approx(10 * (1 + 64) + 10 * 1)
+    assert cost["bytes"] == pytest.approx(0.0)  # elementwise fuses away
+
+
+def test_hlo_cost_cli_exit_codes(tmp_path, capsys):
+    good = tmp_path / "dot.txt"
+    good.write_text(DOT_HLO)
+    assert hlo_cost.main([str(good)]) == 0
+    out = capsys.readouterr().out
+    assert "flops 8192" in out and "bytes 3584" in out
+
+    assert hlo_cost.main([str(tmp_path / "missing.txt")]) == 2
+
+    bad = tmp_path / "notes.txt"
+    bad.write_text("not an hlo dump\n")
+    assert hlo_cost.main([str(bad)]) == 1
+
+
+def test_breakdown_cli_and_tables(tmp_path, capsys):
+    good = tmp_path / "dot.txt"
+    good.write_text(DOT_HLO)
+    assert breakdown.main([str(good), "5"]) == 0
+    assert "dot -> f32[8,32]" in capsys.readouterr().out
+
+    by_bytes, by_flops = breakdown.breakdown(DOT_HLO)
+    (key, b), = by_bytes.items()
+    assert key.startswith("dot ->") and b == 3584
+    assert by_flops[key] == pytest.approx(8192.0)
+
+    assert breakdown.main([str(tmp_path / "missing.txt")]) == 2
+    bad = tmp_path / "notes.txt"
+    bad.write_text("not an hlo dump\n")
+    assert breakdown.main([str(bad)]) == 1
+
+
+def test_parse_hlo_collectives_bytes():
+    got = hlo_mod.parse_hlo_collectives(COLLECTIVE_HLO)
+    assert got["all-gather"] == {"count": 1, "bytes": 16 * 128 * 4}
+    # all-reduce counts both phases: 2 × 64 × 4
+    assert got["all-reduce"] == {"count": 1, "bytes": 2 * 64 * 4}
+    assert hlo_mod.collective_bytes(COLLECTIVE_HLO) == 8192 + 512
+
+
+def test_stablehlo_counters():
+    got = hlo_mod.count_stablehlo_collectives(STABLEHLO)
+    assert got == {"all-gather": 1, "reduce-scatter": 1}
+    assert hlo_mod.count_aliased_args(STABLEHLO) == 2
+
+
+def test_roofline_terms_math():
+    t = roofline_terms(
+        flops_per_device=2 * HW.peak_flops,        # 2 s of compute
+        bytes_per_device=0.5 * HW.hbm_bw,          # 0.5 s of HBM
+        collective_bytes_per_device=0.0,
+        model_flops_global=HW.peak_flops, chips=1)
+    assert t["compute_s"] == pytest.approx(2.0)
+    assert t["memory_s"] == pytest.approx(0.5)
+    assert t["collective_s"] == 0.0
+    assert t["dominant"] == "compute_s"
+    assert t["bound_s"] == pytest.approx(2.0)
+    assert t["useful_compute_ratio"] == pytest.approx(0.5)
+    assert t["compute_fraction_of_bound"] == pytest.approx(1.0)
+
+
+# ------------------------------------------------------------- lint rules
+
+
+def _lint(src):
+    from repro.analysis.lint import lint_source
+    return lint_source(src, "mod.py")
+
+
+def _rules(src):
+    return [f.rule for f in _lint(src)]
+
+
+def test_lint_call_time_jit_in_body():
+    src = ("import jax\n"
+           "def f(x):\n"
+           "    g = jax.jit(lambda y: y + 1)\n"
+           "    return g(x)\n")
+    (f,) = _lint(src)
+    assert f.rule == "call-time-jit" and f.symbol == "f" and f.line == 3
+
+
+def test_lint_call_time_jit_decorator_form():
+    src = ("import jax\n"
+           "def outer(n):\n"
+           "    @jax.jit\n"
+           "    def inner(x):\n"
+           "        return x * n\n"
+           "    return inner\n")
+    assert "call-time-jit" in _rules(src)
+
+
+def test_lint_cached_factory_exempt():
+    src = ("import functools, jax\n"
+           "@functools.lru_cache(maxsize=8)\n"
+           "def make(n):\n"
+           "    @jax.jit\n"
+           "    def inner(x):\n"
+           "        return x * n\n"
+           "    return inner\n")
+    assert _lint(src) == []
+
+
+def test_lint_module_level_jit_ok():
+    assert _lint("import jax\nstep = jax.jit(lambda x: x + 1)\n") == []
+
+
+def test_lint_unbounded_cache():
+    src = ("import functools\n"
+           "@functools.lru_cache(maxsize=None)\n"
+           "def a(k):\n"
+           "    return k\n"
+           "@functools.cache\n"
+           "def b(k):\n"
+           "    return k\n"
+           "@functools.lru_cache(maxsize=32)\n"
+           "def c(k):\n"
+           "    return k\n")
+    assert _rules(src) == ["unbounded-cache", "unbounded-cache"]
+
+
+def test_lint_host_sync_only_in_traced():
+    traced = ("import jax\n"
+              "@jax.jit\n"
+              "def step(x):\n"
+              "    return float(x) + 1.0\n")
+    assert _rules(traced) == ["host-sync"]
+    untraced = ("def report(x):\n"
+                "    return float(x) + 1.0\n")
+    assert _lint(untraced) == []
+
+
+def test_lint_host_sync_propagates_to_callee():
+    src = ("import jax\n"
+           "def helper(x):\n"
+           "    return x.item()\n"
+           "@jax.jit\n"
+           "def step(x):\n"
+           "    return helper(x)\n")
+    assert "host-sync" in _rules(src)
+
+
+def test_lint_bitwise_reassoc():
+    over_list = "import jax.numpy as jnp\nz = jnp.sum([a, b, c])\n"
+    assert _rules(over_list) == ["bitwise-reassoc"]
+    contract = ("import jax.numpy as jnp\n"
+                "def fold(xs):\n"
+                "    \"\"\"Bitwise-identical partial sums.\"\"\"\n"
+                "    return jnp.sum(xs)\n")
+    assert _rules(contract) == ["bitwise-reassoc"]
+    plain = ("import jax.numpy as jnp\n"
+             "def fold(xs):\n"
+             "    return jnp.sum(xs)\n")
+    assert _lint(plain) == []
+
+
+def test_lint_inline_suppression():
+    src = ("import jax\n"
+           "def f(x):\n"
+           "    # lint-ok: call-time-jit (test)\n"
+           "    g = jax.jit(lambda y: y + 1)\n"
+           "    return g(x)\n")
+    assert _lint(src) == []
+    wrong_rule = src.replace("call-time-jit (test)", "host-sync (test)")
+    assert _rules(wrong_rule) == ["call-time-jit"]
+
+
+def test_lint_baseline_matching(tmp_path):
+    from repro.analysis.lint import (lint_source, load_baseline,
+                                     split_baselined)
+    src = ("import jax\n"
+           "def f(x):\n"
+           "    g = jax.jit(lambda y: y + 1)\n"
+           "    return g(x)\n")
+    findings = lint_source(src, "src/repro/mod.py")
+    bl = tmp_path / "baseline.json"
+    bl.write_text(json.dumps(
+        [{"rule": "call-time-jit", "path": "repro/mod.py",
+          "symbol": "f"}]))
+    new, accepted = split_baselined(findings, load_baseline(bl))
+    assert new == [] and len(accepted) == 1
+    # a different symbol does not match
+    new, accepted = split_baselined(
+        findings, [{"rule": "call-time-jit", "path": "repro/mod.py",
+                    "symbol": "g"}])
+    assert len(new) == 1 and accepted == []
+
+
+def test_lint_syntax_error_is_a_finding():
+    assert _rules("def f(:\n") == ["syntax-error"]
+
+
+# -------------------------------------------------------- vmem estimates
+
+
+def test_blocks_dense_fits():
+    from repro.analysis.blocks import splitnn_bottom_blocks
+    r = splitnn_bottom_blocks(512, 128, 128)
+    assert r.resident_bytes == 4 * (512 * 128 + 128 * 128 + 128
+                                    + 512 * 128)
+    assert r.ok and not r.fallback
+
+
+def test_blocks_gather_fallback_boundary():
+    from repro.analysis.blocks import splitnn_bottom_gather_blocks
+    from repro.kernels.padding import GATHER_VMEM_BUDGET
+    rows = GATHER_VMEM_BUDGET // (4 * 128)     # N at d_pad=128
+    at = splitnn_bottom_gather_blocks(rows, 128, 128, 512)
+    over = splitnn_bottom_gather_blocks(rows + 1, 128, 128, 512)
+    assert not at.fallback and at.ok           # exactly at budget: launches
+    assert over.fallback and over.ok           # past it: wrapper falls back
+
+
+def test_blocks_sorted_intersect_regimes():
+    from repro.analysis.blocks import (SINGLE_PASS_CEILING,
+                                       sorted_intersect_blocks)
+    small = sorted_intersect_blocks(1 << 18)
+    assert small.ok and small.resident_bytes == 48 * (1 << 18)
+    # the hardware gap: fits PALLAS_MAX_P but not 16 MB — flagged in note
+    gap = sorted_intersect_blocks(SINGLE_PASS_CEILING + 1)
+    assert not gap.ok and "PALLAS_MAX_P" in gap.note
+    tiled = sorted_intersect_blocks(1 << 21)
+    assert tiled.ok and "tiled" in tiled.note
+    assert tiled.resident_bytes == 4 * 4 * (2 * (1 << 19))
+
+
+def test_blocks_default_matrix_all_ok():
+    from repro.analysis.blocks import vmem_report
+    rows = [r.as_row() for r in vmem_report()]
+    assert len(rows) >= 8
+    assert all(r["ok"] for r in rows)
