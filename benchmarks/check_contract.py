@@ -45,7 +45,9 @@ DEFAULT_SERVE_CSV = os.path.join("experiments", "bench",
 DEFAULT_CONTRACT = os.path.join("experiments", "bench",
                                 "engine_contract.json")
 
-KEY = ("dataset", "model", "variant")
+# quant joined the key with the DESIGN.md §12 wire-dtype sweep; rows
+# from CSVs predating the column default to "none" (the f32 baseline)
+KEY = ("dataset", "model", "variant", "quant")
 
 # serving-engine smoke rows (benchmarks.serve_vfl.run_smoke): the
 # scheduler's counters are a pure function of (trace, slots, policy,
@@ -68,6 +70,10 @@ def row_counters(row: dict) -> dict:
         "dispatches_per_epoch": _ratio(int(row["dispatches"]), epochs),
         "host_syncs_per_epoch": _ratio(int(row["host_syncs"]), epochs),
         "comm_bytes_per_epoch": _ratio(int(row["comm_bytes"]), epochs),
+        # modeled per-step model-axis gather payload (EngineStats) —
+        # the int8/fp8 rows' value is ratio-gated against the f32 twin
+        "gather_payload_bytes": int(row["gather_payload_bytes"])
+        if row.get("gather_payload_bytes") else 0,
     }
 
 
@@ -77,8 +83,30 @@ def load_rows(csv_path: str) -> dict:
         for row in csv.DictReader(f):
             if not row.get("dispatches"):       # knn rows have no engine
                 continue
-            rows[tuple(row[k] for k in KEY)] = row_counters(row)
+            rows[tuple(row.get(k) or "none" for k in KEY)] = \
+                row_counters(row)
     return rows
+
+
+def check_quant_ratios(rows: dict, failures: list) -> None:
+    """Payload-shrink gate: every quantized row's per-step gather
+    payload must be ≤ 0.3x its f32 twin's (same dataset/model/variant,
+    quant="none") — the wire really narrowed, per measured stats."""
+    for key in sorted(rows):
+        ds, model, variant, quant = key
+        if quant == "none":
+            continue
+        twin = rows.get((ds, model, variant, "none"))
+        if twin is None:
+            failures.append(f"{key}: quantized row has no f32 twin to "
+                            f"ratio its gather payload against")
+            continue
+        b = rows[key]["gather_payload_bytes"]
+        f32 = twin["gather_payload_bytes"]
+        if f32 and b > 0.3 * f32:
+            failures.append(
+                f"{key}: gather_payload_bytes {b} > 0.3x the f32 "
+                f"twin's ({f32}) — quantized wire did not narrow")
 
 
 def serve_row_counters(row: dict) -> dict:
@@ -99,7 +127,9 @@ def check(csv_path: str = DEFAULT_CSV,
           serve_csv_path: str = DEFAULT_SERVE_CSV) -> int:
     contract = load_contract(contract_path, KEY)
     failures = []
-    diff_rows(contract, load_rows(csv_path), csv_path, failures)
+    measured = load_rows(csv_path)
+    diff_rows(contract, measured, csv_path, failures)
+    check_quant_ratios(measured, failures)
     serve_contract = load_contract(contract_path, SERVE_KEY,
                                    rows_key="serve_rows")
     n_serve = len(serve_contract)

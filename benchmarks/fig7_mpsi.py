@@ -101,7 +101,7 @@ def run_psi_engine_perf(quick: bool = True, sizes=None):
     wall-clock is emulator overhead, as in fig6's kmeans engine rows).
     """
     from repro.kernels.padding import INTERPRET
-    from repro.kernels.sorted_intersect.kernel import PALLAS_MAX_P
+    from repro.kernels.sorted_intersect.kernel import SINGLE_PASS_MAX_P
     from repro.kernels.sorted_intersect.ops import next_pow2
     from repro.psi import engine as psi_engine
 
@@ -134,17 +134,17 @@ def run_psi_engine_perf(quick: bool = True, sizes=None):
                     secs = min(secs, time.perf_counter() - t0)
             assert np.array_equal(got, expect), name
             base = base if base is not None else secs
-            # past the merge kernel's VMEM bound, impl="pallas" rows
-            # actually measure the ref fallback — flag them honestly
-            fallback = (impl == "pallas"
-                        and next_pow2(n) > PALLAS_MAX_P)
+            # past the single-pass VMEM bound, impl="pallas" rows
+            # measure the multi-pass tiled merge schedule — flag them
+            tiled = (impl == "pallas"
+                     and next_pow2(n) > SINGLE_PASS_MAX_P)
             rows.append(dict(
                 n=n, variant=name, matched=len(expect),
                 seconds=fmt(secs, 4),
                 melem_per_s=fmt(2 * n / secs / 1e6, 2),
                 speedup_vs_host=fmt(base / secs, 2),
                 pallas_interpret=int(INTERPRET),
-                merge_ref_fallback=int(fallback)))
+                merge_tiled=int(tiled)))
     emit(rows, "fig7_psi_engine")
 
 

@@ -1,0 +1,98 @@
+"""Quantized-activation-comm sweep (DESIGN.md §12, ISSUE 9).
+
+For each Table-2 lr/mlp job, trains the SplitNN with the activation
+all_gather in f32 ("none"), int8, and fp8 (when the jax build has
+``float8_e4m3fn``) and emits one CSV row per (dataset, model, quant)
+with test accuracy, accuracy drop vs the f32 twin, per-epoch modeled
+comm bytes, the per-step gather payload, its ratio vs f32, and measured
+step time — the accuracy-vs-bytes trade the paper's comm-efficiency
+claims extend to.
+
+Two asserts make the sweep self-gating (CI uploads the CSV artifact
+either way, but a quantization regression fails the job):
+
+- every int8 row's ``gather_payload_bytes`` ≤ 0.3x its f32 twin's;
+- the worst int8 accuracy drop across the sweep ≤ 1 point (0.01).
+
+    PYTHONPATH=src python -m benchmarks.quant_vfl            # full
+    python -c "...run_quant_sweep(smoke=True)"               # CI smoke
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from benchmarks.common import dataset_partitions, emit, fmt
+from repro.core.splitnn import SplitNNConfig, evaluate, train_splitnn
+from repro.quant import FP8_DTYPE
+
+# the Table-2 classification jobs with a trained bottom (knn has no
+# activations to quantize; BP/YP ride the full table2 sweep instead)
+JOBS = [
+    ("BA", "lr", 0.05), ("BA", "mlp", 0.01),
+    ("MU", "lr", 0.05), ("MU", "mlp", 0.01),
+    ("RI", "lr", 0.05), ("RI", "mlp", 0.01),
+    ("HI", "lr", 0.05), ("HI", "mlp", 0.01),
+]
+
+MAX_INT8_ACC_DROP = 0.01          # ≤ 1 point vs the f32 twin
+MAX_PAYLOAD_RATIO = 0.3           # int8 per-step gather payload vs f32
+
+
+def run_quant_sweep(quick: bool = True, smoke: bool = False,
+                    n_override: Optional[int] = None, mesh=None,
+                    bottom_impl: str = "ref"):
+    """One row per (dataset, model, quant); returns the rows."""
+    jobs = JOBS[:2] if smoke else JOBS
+    if smoke and n_override is None:
+        n_override = 500
+    quants = ["none", "int8"] + (["fp8"] if FP8_DTYPE is not None else [])
+    rows = []
+    worst_drop = 0.0
+    for ds, model, lr in jobs:
+        tr, te = dataset_partitions(ds, quick=quick, n_override=n_override)
+        cfg = SplitNNConfig(model=model, n_classes=2, lr=lr,
+                            batch_size=max(8, tr.n_samples // 100),
+                            max_epochs=(15 if smoke else
+                                        60 if quick else 200))
+        base_acc = base_payload = None
+        for quant in quants:
+            qv = None if quant == "none" else quant
+            rep = train_splitnn(tr, cfg, mesh=mesh,
+                                bottom_impl=bottom_impl, quant=qv)
+            acc = evaluate(rep.params, cfg, te,
+                           bottom_impl=bottom_impl, quant=qv)
+            st = rep.engine_stats
+            payload = st.gather_payload_bytes
+            if quant == "none":
+                base_acc, base_payload = acc, payload
+            drop = base_acc - acc
+            ratio = payload / base_payload if base_payload else 0.0
+            if quant == "int8":
+                worst_drop = max(worst_drop, drop)
+                assert payload <= MAX_PAYLOAD_RATIO * base_payload, (
+                    f"{ds}/{model}: int8 gather payload {payload}B > "
+                    f"{MAX_PAYLOAD_RATIO}x f32 ({base_payload}B)")
+            rows.append({
+                "dataset": ds, "model": model, "quant": quant,
+                "n_train": tr.n_samples, "epochs": rep.epochs,
+                "acc": fmt(acc, 4), "acc_drop_vs_f32": fmt(drop, 4),
+                "final_loss": fmt(rep.losses[-1], 5),
+                "comm_bytes_per_epoch": rep.comm_bytes // max(rep.epochs,
+                                                              1),
+                "gather_payload_bytes": payload,
+                "payload_ratio_vs_f32": fmt(ratio, 4),
+                "step_ms": fmt(1e3 * rep.train_seconds
+                               / max(rep.steps, 1), 3),
+            })
+            print(f"{ds:>2}/{model:<6} {quant:<5} acc={acc:.4f} "
+                  f"drop={drop:+.4f} payload={payload}B "
+                  f"ratio={ratio:.4f}")
+    assert worst_drop <= MAX_INT8_ACC_DROP, (
+        f"worst int8 accuracy drop {worst_drop:.4f} exceeds "
+        f"{MAX_INT8_ACC_DROP} — quantized training regressed")
+    emit(rows, "quant_vfl")
+    return rows
+
+
+if __name__ == "__main__":
+    run_quant_sweep()

@@ -72,7 +72,7 @@ def run(quick: bool = True):
 
 def run_e2e(quick: bool = True, smoke: bool = False, mesh=None,
             n_override: Optional[int] = None, bottom_impl: str = "ref",
-            trace_out: Optional[str] = None):
+            trace_out: Optional[str] = None, quants=("none",)):
     """End-to-end Table-2 artifact with per-variant STAGE timings.
 
     ``smoke=True`` (CI): two jobs at n=500 with short training, enough
@@ -81,6 +81,11 @@ def run_e2e(quick: bool = True, smoke: bool = False, mesh=None,
     measures the sharded pipeline on a real mesh; ``bottom_impl=
     "pallas"`` measures the fused VMEM-resident bottom kernel (real TPU
     — under the CPU interpreter it times the emulator).
+
+    ``quants`` repeats the whole sweep per activation-comm wire dtype
+    (DESIGN.md §12): "none" is the f32 baseline; "int8"/"fp8" rows
+    carry a shrunken ``gather_payload_bytes``/``comm_bytes`` the
+    contract gate ratios against the f32 twin row.
 
     ``trace_out`` turns on span tracing (DESIGN.md §10): ONE tracer is
     shared across every (job, variant) run, so the written Chrome-trace
@@ -102,40 +107,51 @@ def run_e2e(quick: bool = True, smoke: bool = False, mesh=None,
                             batch_size=max(8, tr.n_samples // 100),
                             max_epochs=(15 if smoke else
                                         60 if quick else 200))
-        totals = {}
-        for variant in VARIANTS:
-            rep = run_pipeline(tr, te, cfg, variant=variant,
-                               clusters_per_client=k, protocol="oprf",
-                               seed=0, mesh=mesh, bottom_impl=bottom_impl,
-                               trace=tracer)
-            totals[variant] = rep.total_seconds
-            # one registry per run; its snapshot is the row — the gate
-            # and the CSV can never disagree with the dataclasses
-            reg = MetricsRegistry()
-            rep.emit_metrics(reg)
-            snap = reg.snapshot()
-            rows.append({
-                "dataset": ds, "model": model, "variant": variant,
-                "n_train": snap["pipeline.n_train"],
-                "align_s": fmt(snap["pipeline.align_seconds"], 4),
-                "align_wall_s": fmt(snap["pipeline.align_wall_seconds"], 4),
-                "coreset_s": fmt(snap["pipeline.coreset_seconds"], 4),
-                "coreset_wall_s": fmt(
-                    snap["pipeline.coreset_wall_seconds"], 4),
-                "train_s": fmt(snap["pipeline.train_seconds"], 4),
-                "train_wall_s": fmt(snap["pipeline.train_wall_seconds"], 4),
-                "total_s": fmt(rep.total_seconds, 4),
-                "metric": fmt(snap["pipeline.metric"], 4),
-                "epochs": snap["train.epochs"],
-                "steps": snap["train.steps"],
-                "dispatches": snap.get("train.dispatches", ""),
-                "host_syncs": snap.get("train.host_syncs", ""),
-                "comm_bytes": snap["train.comm_bytes"],
-                "train_shards": snap.get("train.shards", ""),
-                "model_shards": snap.get("train.model_shards", ""),
-                "speedup_vs_starall": fmt(
-                    totals["starall"] / max(rep.total_seconds, 1e-12), 2),
-            })
+        for quant in quants:
+            totals = {}
+            qv = None if quant in (None, "none") else quant
+            for variant in VARIANTS:
+                rep = run_pipeline(tr, te, cfg, variant=variant,
+                                   clusters_per_client=k, protocol="oprf",
+                                   seed=0, mesh=mesh,
+                                   bottom_impl=bottom_impl,
+                                   quant=qv, trace=tracer)
+                totals[variant] = rep.total_seconds
+                # one registry per run; its snapshot is the row — the
+                # gate and the CSV can never disagree with the
+                # dataclasses (str-valued fields like quant are skipped
+                # by emit, so the quant column is written explicitly)
+                reg = MetricsRegistry()
+                rep.emit_metrics(reg)
+                snap = reg.snapshot()
+                rows.append({
+                    "dataset": ds, "model": model, "variant": variant,
+                    "quant": quant or "none",
+                    "n_train": snap["pipeline.n_train"],
+                    "align_s": fmt(snap["pipeline.align_seconds"], 4),
+                    "align_wall_s": fmt(
+                        snap["pipeline.align_wall_seconds"], 4),
+                    "coreset_s": fmt(snap["pipeline.coreset_seconds"], 4),
+                    "coreset_wall_s": fmt(
+                        snap["pipeline.coreset_wall_seconds"], 4),
+                    "train_s": fmt(snap["pipeline.train_seconds"], 4),
+                    "train_wall_s": fmt(
+                        snap["pipeline.train_wall_seconds"], 4),
+                    "total_s": fmt(rep.total_seconds, 4),
+                    "metric": fmt(snap["pipeline.metric"], 4),
+                    "epochs": snap["train.epochs"],
+                    "steps": snap["train.steps"],
+                    "dispatches": snap.get("train.dispatches", ""),
+                    "host_syncs": snap.get("train.host_syncs", ""),
+                    "comm_bytes": snap["train.comm_bytes"],
+                    "gather_payload_bytes": snap.get(
+                        "train.gather_payload_bytes", ""),
+                    "train_shards": snap.get("train.shards", ""),
+                    "model_shards": snap.get("train.model_shards", ""),
+                    "speedup_vs_starall": fmt(
+                        totals["starall"] / max(rep.total_seconds,
+                                                1e-12), 2),
+                })
     emit(rows, "table2_e2e")
     if trace_out:
         os.makedirs(os.path.dirname(trace_out) or ".", exist_ok=True)

@@ -24,10 +24,13 @@ import dataclasses
 from typing import Dict, List
 
 from repro.kernels.padding import GATHER_VMEM_BUDGET, round_up
+from repro.kernels.sorted_intersect.kernel import (PALLAS_MAX_P,
+                                                   SINGLE_PASS_MAX_P)
 
 VMEM_BUDGET = 16 * 2 ** 20          # bytes of VMEM per TensorCore
 F32 = 4
 U32 = 4
+I8 = 1
 
 
 @dataclasses.dataclass
@@ -52,29 +55,50 @@ class BlockReport:
                 "ok": self.ok, "note": self.note}
 
 
-def splitnn_bottom_blocks(b: int, d: int, o: int,
-                          block_b: int = 512) -> BlockReport:
+def splitnn_bottom_blocks(b: int, d: int, o: int, block_b: int = 512,
+                          quant: str = None) -> BlockReport:
     """Dense slab pass: grid (M, B/bb); x (1,bb,dp) streams, w (1,dp,op)
-    + bias (1,1,op) resident across batch tiles, out (1,bb,op)."""
+    + bias (1,1,op) resident across batch tiles, out (1,bb,op).
+
+    ``quant="int8"`` mirrors the i8 twin: x/w blocks shrink to 1 B per
+    element and two f32 scale rows — sx (1,1,bb) streaming with the
+    batch tile, sw (1,1,op) resident like the bias — join the set."""
     bb = min(block_b, round_up(b, 8))
     dp, op = round_up(d, 128), round_up(o, 128)
-    resident = F32 * (bb * dp + dp * op + op + bb * op)
-    return BlockReport("splitnn_bottom", f"B={b},d={d},o={o},bb={bb}",
+    if quant == "int8":
+        resident = (I8 * (bb * dp + dp * op)
+                    + F32 * (bb + 2 * op + bb * op))
+    else:
+        resident = F32 * (bb * dp + dp * op + op + bb * op)
+    tag = "splitnn_bottom_int8" if quant == "int8" else "splitnn_bottom"
+    return BlockReport(tag, f"B={b},d={d},o={o},bb={bb}",
                        resident, VMEM_BUDGET)
 
 
 def splitnn_bottom_gather_blocks(n: int, d: int, o: int, b: int,
-                                 block_b: int = 512) -> BlockReport:
+                                 block_b: int = 512,
+                                 quant: str = None) -> BlockReport:
     """Gather-fused pass: the client's FULL (1,N,dp) slab is the
     resident block (rows gathered in-kernel by the prefetched idx), so
     the slab itself is held to ``GATHER_VMEM_BUDGET`` — past it the ops
-    wrapper falls back to gather-then-dense before launching."""
+    wrapper falls back to gather-then-dense before launching.
+
+    ``quant="int8"`` mirrors the i8 gather twin: the resident slab is
+    int8 (1 B/element — the same byte budget admits 4x the rows, the
+    ops predicate scales ``elem`` accordingly) and the pre-gathered
+    sx (1,1,bb) f32 scale tile streams with the batch block."""
     bb = min(block_b, round_up(b, 8))
     dp, op = round_up(d, 128), round_up(o, 128)
-    slab = F32 * n * dp
-    resident = slab + F32 * (dp * op + op + bb * op)
+    if quant == "int8":
+        slab = I8 * n * dp
+        resident = slab + I8 * dp * op + F32 * (bb + 2 * op + bb * op)
+        tag = "splitnn_bottom_int8_gather"
+    else:
+        slab = F32 * n * dp
+        resident = slab + F32 * (dp * op + op + bb * op)
+        tag = "splitnn_bottom_gather"
     return BlockReport(
-        "splitnn_bottom_gather", f"N={n},d={d},o={o},B={b},bb={bb}",
+        tag, f"N={n},d={d},o={o},B={b},bb={bb}",
         resident, VMEM_BUDGET, fallback=slab > GATHER_VMEM_BUDGET,
         note=f"slab={slab}B vs gather budget {GATHER_VMEM_BUDGET}B")
 
@@ -115,27 +139,26 @@ def psi_prf_blocks(p: int, block_n: int = 2048) -> BlockReport:
 SINGLE_PASS_CEILING = VMEM_BUDGET // (U32 * 12)   # 48 bytes per element
 
 
-def sorted_intersect_blocks(p: int, max_p: int = 1 << 19) -> BlockReport:
-    """Bitonic merge.  Single-pass (P ≤ PALLAS_MAX_P): one block holds
-    4×(P,) in + 4×(2P,) out u32 lanes → 48 bytes/element, so the 16 MB
-    ceiling is ``SINGLE_PASS_CEILING`` ≈ 2^18.4 — BELOW PALLAS_MAX_P, a
-    real-hardware limit the interpreter can't see (the ROADMAP hardware
-    sweep must lower PALLAS_MAX_P or tile earlier; rows in that band
-    carry the warning in their note).  Past PALLAS_MAX_P the ops
-    wrapper re-routes to the multi-pass tiled merge, whose largest
-    block is the local-stage (1, chunk) tile: 2 in + 2 out lanes of
-    ``chunk = 2·PALLAS_MAX_P`` elements."""
+def sorted_intersect_blocks(p: int,
+                            max_p: int = SINGLE_PASS_MAX_P) -> BlockReport:
+    """Bitonic merge.  Single-pass (P ≤ SINGLE_PASS_MAX_P): one block
+    holds 4×(P,) in + 4×(2P,) out u32 lanes → 48 bytes/element, so the
+    exact 16 MB ceiling is ``SINGLE_PASS_CEILING`` ≈ 2^18.4 and the ops
+    wrapper admits only up to the next power of two BELOW it
+    (``SINGLE_PASS_MAX_P`` = 2^18 — the over-admission band this table
+    used to flag is retired).  Past that the ops wrapper re-routes to
+    the multi-pass tiled merge, whose largest block is the local-stage
+    (1, chunk) tile: 2 in + 2 out lanes of ``chunk = 2·PALLAS_MAX_P``
+    elements (PALLAS_MAX_P stays the tiled chunk SPAN — the local pass
+    names half the lanes of the single-pass kernel, so the same budget
+    reaches chunks twice as long)."""
     if p > max_p:
-        chunk = min(2 * max_p, 2 * p)
+        chunk = min(2 * PALLAS_MAX_P, 2 * p)
         resident = U32 * 4 * chunk
         note = f"tiled multi-pass merge (chunk={chunk})"
     else:
         resident = U32 * (4 * p + 4 * 2 * p)
         note = ""
-        if p > SINGLE_PASS_CEILING:
-            note = (f"single-pass P={p} is under PALLAS_MAX_P but over "
-                    f"the 16MB ceiling (P<={SINGLE_PASS_CEILING}) — "
-                    "hardware sweep must lower PALLAS_MAX_P or tile")
     return BlockReport("sorted_intersect", f"P={p}", resident,
                        VMEM_BUDGET, note=note)
 
@@ -147,16 +170,23 @@ def vmem_report(shapes: Dict[str, Dict[str, int]] = None
     (the gather kernels exactly AT the budget boundary, the merge at
     PALLAS_MAX_P)."""
     budget_rows = GATHER_VMEM_BUDGET // (F32 * 128)   # N at d_pad=128
+    i8_rows = GATHER_VMEM_BUDGET // (I8 * 128)        # 4x the f32 reach
     reports = [
         splitnn_bottom_blocks(512, 128, 128),
         splitnn_bottom_blocks(4096, 512, 128),
+        splitnn_bottom_blocks(4096, 512, 128, quant="int8"),
         splitnn_bottom_gather_blocks(budget_rows, 128, 128, 512),
         splitnn_bottom_gather_blocks(budget_rows + 1, 128, 128, 512),
+        splitnn_bottom_gather_blocks(i8_rows, 128, 128, 512,
+                                     quant="int8"),
+        splitnn_bottom_gather_blocks(i8_rows + 1, 128, 128, 512,
+                                     quant="int8"),
         kmeans_update_blocks(1 << 20, 16, 10),
         kmeans_update_gather_blocks(budget_rows, 16, 10, 1024),
         kmeans_update_gather_blocks(4 * budget_rows, 16, 10, 1024),
         psi_prf_blocks(1 << 20),
-        sorted_intersect_blocks(1 << 18),      # largest single-pass fit
+        sorted_intersect_blocks(SINGLE_PASS_MAX_P),   # largest 1-pass fit
+        sorted_intersect_blocks(1 << 19),      # first tiled power of two
         sorted_intersect_blocks(1 << 21),      # tiled multi-pass route
     ]
     return reports

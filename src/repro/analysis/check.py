@@ -21,7 +21,9 @@ values, HARD invariants are enforced even under ``--write``:
 
 - train epoch step: zero host callbacks, zero f64, and exactly ONE
   all_gather inside the scan body if and only if the mesh has a model
-  axis (the paper's client→server activation send, DESIGN.md §8);
+  axis (the paper's client→server activation send, DESIGN.md §8) —
+  for the quantized variants (int8/fp8, DESIGN.md §12) ALSO that the
+  lowered all_gather output is ≤ 0.3x the f32 twin's bytes;
 - PSI / scoring / k-means programs: zero collectives, zero callbacks
   (alignment's real communication is protocol-level, not in-program);
 - every Pallas kernel's BlockSpec footprint fits VMEM
@@ -121,31 +123,46 @@ def _psi_programs(meshes):
 
 
 def _train_programs(meshes):
-    """(key, census, has_model_axis) per epoch-step program per mesh —
-    built by the SAME ``make_epoch_fn`` the engine runs, so the census
-    can never audit a different program than training executes."""
+    """(key, census, has_model_axis, quant, base_tag) per epoch-step
+    program per mesh — built by the SAME ``make_epoch_fn`` the engine
+    runs, so the census can never audit a different program than
+    training executes.  Quantized variants ride the same matrix: their
+    lowered programs must keep the ONE-gather/zero-f64 invariants AND
+    shrink the model-axis all_gather payload to ≤ 0.3x the f32 twin
+    lowered alongside (the ratio gate in ``run_census``)."""
     from repro.analysis.census import census_program
     from repro.core.splitnn import SplitNNConfig
+    from repro.quant import FP8_DTYPE
     from repro.sharding import resolve_train_mesh
     from repro.train.vfl import make_epoch_fn
 
     fd = (3, 4, 5)
-    variants = (
-        ("lr", SplitNNConfig("lr", 2, batch_size=64), "ref"),
-        ("mlp", SplitNNConfig("mlp", 2, batch_size=64), "pallas"),
-    )
+    variants = [
+        ("lr", SplitNNConfig("lr", 2, batch_size=64), "ref", None),
+        ("mlp", SplitNNConfig("mlp", 2, batch_size=64), "pallas", None),
+        ("lr-int8", SplitNNConfig("lr", 2, batch_size=64), "ref",
+         "int8"),
+        ("mlp-int8", SplitNNConfig("mlp", 2, batch_size=64), "pallas",
+         "int8"),
+    ]
+    if FP8_DTYPE is not None:
+        variants.append(
+            ("lr-fp8", SplitNNConfig("lr", 2, batch_size=64), "ref",
+             "fp8"))
     for mesh_name in _TRAIN_MESHES:
         if mesh_name not in meshes:
             continue
-        for tag, cfg, impl in variants:
+        for tag, cfg, impl, quant in variants:
             mesh, data_axis, n_data, model_axis, n_model = \
                 resolve_train_mesh(meshes[mesh_name])
             prog = make_epoch_fn(cfg, fd, mesh, data_axis, model_axis,
-                                 n_data, n_model, impl, 512, True)
+                                 n_data, n_model, impl, 512, True,
+                                 quant)
             args = prog.abstract_args(n=256, bs=64)
             yield ((f"train.epoch.{tag}+{impl}", mesh_name),
                    census_program(prog.jitted, args),
-                   model_axis is not None)
+                   model_axis is not None, quant,
+                   f"{tag.split('-')[0]}+{impl}")
 
 
 def _serve_programs():
@@ -160,12 +177,15 @@ def _serve_programs():
 
     fd = (3, 4, 5)
     d_max = max(fd)
-    for tag, cfg, impl in (("lr", SplitNNConfig("lr", 2), "ref"),
-                           ("mlp", SplitNNConfig("mlp", 2), "pallas")):
+    for tag, cfg, impl, quant in (
+            ("lr", SplitNNConfig("lr", 2), "ref", None),
+            ("mlp", SplitNNConfig("mlp", 2), "pallas", None),
+            ("lr-int8", SplitNNConfig("lr", 2), "ref", "int8"),
+            ("mlp-int8", SplitNNConfig("mlp", 2), "pallas", "int8")):
         packed = jax.eval_shape(lambda c=cfg: pack_slab_params(
             models.init_splitnn(c, list(fd)), d_max))
         x_slab = jax.ShapeDtypeStruct((len(fd), 64, d_max), jnp.float32)
-        fn = _score_step_fn(cfg, len(fd), impl, 512)
+        fn = _score_step_fn(cfg, len(fd), impl, 512, quant)
         yield (f"serve.score.{tag}+{impl}", "1"), \
             census_program(fn, (packed, x_slab))
 
@@ -210,7 +230,8 @@ def run_census(meshes) -> Tuple[Dict[Tuple[str, str], Dict[str, Any]],
         check_common(key, census)
         check_zero_comm(key, census)
 
-    for key, census, has_model in _train_programs(meshes):
+    ag_bytes: Dict[Tuple[str, str], Dict[str, int]] = {}
+    for key, census, has_model, quant, base in _train_programs(meshes):
         rows[key] = census.counters()
         check_common(key, census)
         ag = census.collectives_in_loop.get("all_gather", 0)
@@ -221,6 +242,25 @@ def run_census(meshes) -> Tuple[Dict[Tuple[str, str], Dict[str, Any]],
             hard.append(
                 f"{key}: {ag} all_gather(s) inside the scan body, "
                 f"contract requires exactly {want} ({why})")
+        if has_model:
+            ag_bytes.setdefault((base, key[1]), {})[quant or "f32"] = \
+                census.collective_bytes.get("all_gather", 0)
+
+    # payload-shrink gate over LOWERED bytes: on every model-axis mesh,
+    # the quantized epoch program's all_gather output must be ≤ 0.3x
+    # the f32 twin's (the wire really narrowed — not just the counter)
+    for (base, mesh_name), by_quant in sorted(ag_bytes.items()):
+        f32 = by_quant.get("f32", 0)
+        for quant in sorted(q for q in by_quant if q != "f32"):
+            b = by_quant[quant]
+            if not f32:
+                hard.append(f"train.epoch.{base}@{mesh_name}: no f32 "
+                            f"twin to ratio quant={quant} against")
+            elif b > 0.3 * f32:
+                hard.append(
+                    f"train.epoch.{base}@{mesh_name}: quant={quant} "
+                    f"all_gather payload {b}B > 0.3x f32 twin "
+                    f"({f32}B) — wire did not narrow")
 
     for key, census in _serve_programs():
         rows[key] = census.counters()

@@ -41,7 +41,8 @@ ACT_BYTES = 4  # f32 activation/gradient element on the wire
 
 __all__ = [
     "ACT_BYTES", "SplitNNConfig", "TrainReport", "EngineStats",
-    "init_splitnn", "splitnn_forward", "activation_bytes_per_sample",
+    "init_splitnn", "splitnn_forward", "activation_width",
+    "activation_bytes_per_sample",
     "train_splitnn", "predict", "evaluate", "knn_predict",
 ]
 
@@ -139,13 +140,28 @@ def _loss_fn(params, cfg: SplitNNConfig, xs, y, w):
     return _loss_from_out(splitnn_forward(params, cfg, xs), cfg, y, w)
 
 
-def activation_bytes_per_sample(cfg: SplitNNConfig, m_clients: int) -> int:
-    """Instance-wise communication per sample per step (fwd act + bwd grad)."""
+def activation_width(cfg: SplitNNConfig) -> int:
+    """Per-client activation elements per sample on the wire."""
     if cfg.model in ("lr", "linreg"):
-        width = 1 if cfg.n_classes in (0, 2) else cfg.n_classes
-    else:
-        width = cfg.bottom_dim
-    return 2 * width * ACT_BYTES * m_clients
+        return 1 if cfg.n_classes in (0, 2) else cfg.n_classes
+    return cfg.bottom_dim
+
+
+def activation_bytes_per_sample(cfg: SplitNNConfig, m_clients: int,
+                                quant: Optional[str] = None) -> int:
+    """Instance-wise communication per sample per step (fwd act + bwd grad).
+
+    Derived from the communicated dtypes, not a hardcoded 4 B/elem: the
+    forward activation ships in the wire dtype (1 byte quantized, 4
+    f32 — ``repro.quant.wire_bytes``), the backward gradient is always
+    f32 (the straight-through backward of DESIGN.md §12).  A quantized
+    payload's per-row-block scale bytes are per STEP, not per sample —
+    the engines account them via ``repro.quant.scale_bytes_per_step``.
+    """
+    from repro.quant import wire_bytes
+
+    width = activation_width(cfg)
+    return (wire_bytes(quant) + ACT_BYTES) * width * m_clients
 
 
 # ------------------------------------------------------------------ training
@@ -157,7 +173,8 @@ def train_splitnn(partition: VerticalPartition, cfg: SplitNNConfig, *,
                   mesh=None, shard_axis: Optional[str] = None,
                   bottom_impl: str = "ref",
                   block_b: int = 512,
-                  fuse_gather: bool = True) -> TrainReport:
+                  fuse_gather: bool = True,
+                  quant: Optional[str] = None) -> TrainReport:
     """Mini-batch Adam training to the paper's convergence criterion.
 
     Thin stage entry point over ``repro.train.vfl``:
@@ -172,14 +189,23 @@ def train_splitnn(partition: VerticalPartition, cfg: SplitNNConfig, *,
       scalar-prefetches the per-step schedule indices into that pass
       (bitwise-equal to the explicit ``slab[:, idx, :]`` gather).
     - ``engine="loop"``: the legacy per-minibatch host loop (parity
-      oracle and dispatch-overhead baseline; single-device only).
+      oracle and dispatch-overhead baseline; single-device only, f32
+      only — ``quant`` needs the scan engine's slab path).
+
+    ``quant`` ("int8"|"fp8", DESIGN.md §12) quantizes the per-step
+    activation send (and, for int8, the bottom GEMM) to a 1-byte wire
+    dtype with pow2 block scales.
     """
+    from repro.quant import resolve_quant
     from repro.train import vfl
 
     if engine == "loop":
         if mesh is not None:
             raise ValueError("engine='loop' does not shard; use the scan "
                              "engine for mesh training")
+        if resolve_quant(quant) is not None:
+            raise ValueError("engine='loop' communicates f32 only; use the "
+                             "scan engine for quantized training")
         return vfl.train_loop(partition, cfg, sample_weights=sample_weights,
                               bandwidth=bandwidth, latency=latency,
                               verbose=verbose)
@@ -189,13 +215,14 @@ def train_splitnn(partition: VerticalPartition, cfg: SplitNNConfig, *,
                           bandwidth=bandwidth, latency=latency, mesh=mesh,
                           shard_axis=shard_axis, bottom_impl=bottom_impl,
                           block_b=block_b, fuse_gather=fuse_gather,
-                          verbose=verbose)
+                          quant=quant, verbose=verbose)
 
 
 # ---------------------------------------------------------------- evaluation
 
 def predict(params, cfg: SplitNNConfig, partition: VerticalPartition, *,
-            block_b: int = 512, bottom_impl: str = "ref") -> np.ndarray:
+            block_b: int = 512, bottom_impl: str = "ref",
+            quant: Optional[str] = None) -> np.ndarray:
     """Batched prediction through the serving score path.
 
     Historically this pushed the WHOLE partition through the per-client
@@ -205,11 +232,13 @@ def predict(params, cfg: SplitNNConfig, partition: VerticalPartition, *,
     memory is bounded by one block and the ``splitnn_bottom`` slab
     kernel is exercised.  Outputs are bitwise-equal to the one-shot
     forward on full batches (row independence; the scoring forward
-    reproduces ``splitnn_forward``'s reduction order)."""
+    reproduces ``splitnn_forward``'s reduction order).  ``quant``
+    applies the wire rounding quantized training saw, so quantized
+    checkpoints evaluate under their training numerics."""
     from repro.serve.vfl import score_partition
 
     out = score_partition(params, cfg, partition, block_b=block_b,
-                          bottom_impl=bottom_impl)
+                          bottom_impl=bottom_impl, quant=quant)
     if cfg.n_classes == 0:
         return out[:, 0]
     if cfg.n_classes == 2 and out.shape[-1] == 1:
@@ -218,11 +247,12 @@ def predict(params, cfg: SplitNNConfig, partition: VerticalPartition, *,
 
 
 def evaluate(params, cfg: SplitNNConfig, partition: VerticalPartition, *,
-             block_b: int = 512, bottom_impl: str = "ref") -> float:
+             block_b: int = 512, bottom_impl: str = "ref",
+             quant: Optional[str] = None) -> float:
     """Accuracy for classification, MSE for regression (batched through
     the serving score path — see ``predict``)."""
     pred = predict(params, cfg, partition, block_b=block_b,
-                   bottom_impl=bottom_impl)
+                   bottom_impl=bottom_impl, quant=quant)
     if cfg.n_classes == 0:
         return float(np.mean((pred - partition.labels) ** 2))
     return float(np.mean(pred == partition.labels))

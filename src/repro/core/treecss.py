@@ -145,6 +145,7 @@ def run_pipeline(train_part: VerticalPartition,
                  bottom_impl: str = "ref",
                  fuse_gather: bool = True,
                  block_b: int = 512,
+                 quant: Optional[str] = None,
                  trace=None) -> PipelineReport:
     """``mesh`` (with optional ``shard_axis``) now shards ALL THREE
     device-path stages through one knob, and accepts 1-D ``("data",)``
@@ -165,6 +166,10 @@ def run_pipeline(train_part: VerticalPartition,
     were silently dropped here before, so pipeline callers could never
     actually toggle the fusion).  Evaluation reuses ``block_b`` and, for
     the slab impls, ``bottom_impl`` through the batched scoring path.
+    ``quant`` ("int8"|"fp8", DESIGN.md §12) quantizes the training
+    stage's per-step activation send (int8 also runs the int8 bottom
+    kernels); evaluation applies the same wire rounding, so the metric
+    reflects quantized inference of the quantized-trained model.
 
     ``trace`` turns on the observability layer (DESIGN.md §10): pass a
     ``repro.obs.Tracer`` to collect this run's spans into it (sharing
@@ -247,7 +252,7 @@ def run_pipeline(train_part: VerticalPartition,
                     train_data, cfg, sample_weights=weights,
                     mesh=mesh, shard_axis=shard_axis,
                     engine=train_engine, bottom_impl=bottom_impl,
-                    fuse_gather=fuse_gather, block_b=block_b)
+                    fuse_gather=fuse_gather, block_b=block_b, quant=quant)
             train_wall = now() - t0
             tr_sp.set(comm_bytes=train_report.comm_bytes,
                       epochs=train_report.epochs)
@@ -257,7 +262,8 @@ def run_pipeline(train_part: VerticalPartition,
                          else "ref")
             with span("pipeline.serve", rows=test_part.n_samples):
                 metric = evaluate(train_report.params, cfg, test_part,
-                                  block_b=block_b, bottom_impl=eval_impl)
+                                  block_b=block_b, bottom_impl=eval_impl,
+                                  quant=quant)
 
     return PipelineReport(
         variant=variant, mpsi=mpsi_stats, coreset=coreset_res,

@@ -13,9 +13,11 @@ two implementations cannot drift; what the pallas_call adds is the
 VMEM residency/layout contract that Mosaic compiles on real TPU
 (parity-tested under INTERPRET).
 
-VMEM bound: 2 key lanes × 2P × 4B resident (plus the rank cumsum), so a
-single block handles P up to PALLAS_MAX_P = 2^19 per core on a
-16 MB-VMEM TPU.  Past that bound ``sorted_intersect_tiled`` runs the
+VMEM bound: the single block names 4 input lanes of (P,) and 4 output
+lanes of (2P,) u32 in its specs — 48 B per element — so a 16 MB-VMEM
+TPU core admits P up to SINGLE_PASS_MAX_P = 2^18 (the analysis/blocks
+census puts the exact ceiling at ~2^18.4; the next power of two would
+need 24 MB).  Past that bound ``sorted_intersect_tiled`` runs the
 SAME merge network as a multi-pass grid schedule (DESIGN.md §5): the
 bitonic network is oblivious, so its stages split freely across
 dispatches —
@@ -48,7 +50,14 @@ from jax.experimental import pallas as pl
 
 from repro.kernels.sorted_intersect import ref
 
-PALLAS_MAX_P = 1 << 19    # single-block VMEM bound (per-side length)
+# Per-side span of one VMEM-resident chunk in the tiled schedule (the
+# local pass holds 2 aliased key lanes of 2·PALLAS_MAX_P elements —
+# half the single-pass kernel's 8-lane footprint, so it reaches 2x
+# further).  The single-pass kernel is admitted only up to
+# SINGLE_PASS_MAX_P: at 48 B/element its 8 named lanes exceed 16 MB
+# beyond P ≈ 2^18.4, so the next power of two is the boundary.
+PALLAS_MAX_P = 1 << 19
+SINGLE_PASS_MAX_P = 1 << 18
 
 
 def _merge_kernel(a_kh_ref, a_kl_ref, b_kh_ref, b_kl_ref,

@@ -18,7 +18,7 @@ import numpy as np
 
 from repro.kernels.padding import INTERPRET
 from repro.kernels.sorted_intersect import ref
-from repro.kernels.sorted_intersect.kernel import (PALLAS_MAX_P,
+from repro.kernels.sorted_intersect.kernel import (SINGLE_PASS_MAX_P,
                                                    sorted_intersect_pallas,
                                                    sorted_intersect_tiled)
 from repro.kernels.sorted_intersect.ref import PAD_A, PAD_B
@@ -55,10 +55,11 @@ def sorted_intersect(a_kh: jnp.ndarray, a_kl: jnp.ndarray,
     b_kh, b_kl = _pad_side(b_kh, b_kl, PAD_B, p)
     if impl == "ref":
         return ref.sorted_intersect(a_kh, a_kl, b_kh, b_kl)
-    # past the single-block VMEM bound the same merge network runs as a
-    # multi-pass grid schedule (cross-stage passes + VMEM-resident chunk
-    # finish) — bitwise-identical outputs, no jnp fallback
-    if p > PALLAS_MAX_P:
+    # past the single-block VMEM bound (48 B/element: P > 2^18 blows
+    # the 16 MB budget) the same merge network runs as a multi-pass
+    # grid schedule (cross-stage passes + VMEM-resident chunk finish) —
+    # bitwise-identical outputs, no jnp fallback
+    if p > SINGLE_PASS_MAX_P:
         return sorted_intersect_tiled(a_kh, a_kl, b_kh, b_kl,
                                       interpret=INTERPRET)
     return sorted_intersect_pallas(a_kh, a_kl, b_kh, b_kl,

@@ -65,6 +65,57 @@ def splitnn_bottom_pallas(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, *,
     )(x, w, b)
 
 
+# ----------------------------------------------------- int8 dense variant
+
+
+def _bottom_int8_kernel(relu: bool, xq_ref, sx_ref, wq_ref, sw_ref, b_ref,
+                        out_ref):
+    xq = xq_ref[0]                            # (bb, dp) int8 batch tile
+    wq = wq_ref[0]                            # (dp, op) resident int8 weights
+    acc = jax.lax.dot_general(xq, wq, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)  # MXU i8 path
+    # rank-1 f32 epilogue: per-row scale x per-column scale, then bias
+    scale = sx_ref[0].reshape(-1, 1) * sw_ref[0]        # (bb, 1) x (1, op)
+    a = acc.astype(jnp.float32) * scale + b_ref[0]
+    out_ref[0] = jnp.maximum(a, 0.0) if relu else a
+
+
+def splitnn_bottom_int8_pallas(xq: jnp.ndarray, sx: jnp.ndarray,
+                               wq: jnp.ndarray, sw: jnp.ndarray,
+                               b: jnp.ndarray, *, relu: bool,
+                               block_b: int = 512,
+                               interpret: bool = True) -> jnp.ndarray:
+    """int8 twin of :func:`splitnn_bottom_pallas` (DESIGN.md §12).
+
+    xq (M, Bp, dp) i8, sx (M, 1, Bp) f32 per-row dequant scales (lane
+    axis = batch, tiled (1, 1, bb) alongside the batch grid), wq
+    (M, dp, op) i8, sw (M, 1, op) f32 per-column scales, b (M, 1, op)
+    f32.  Same grid/residency scheme as the f32 kernel; the matmul
+    accumulates i8 x i8 -> i32 on the MXU's native int path and the
+    f32 scale/bias epilogue runs in VREGs.  Returns (M, Bp, op) f32.
+    """
+    m, bp, dp = xq.shape
+    op = wq.shape[2]
+    assert bp % block_b == 0 and dp % 128 == 0 and op % 128 == 0, \
+        (m, bp, dp, op, block_b)
+    grid = (m, bp // block_b)
+    kernel = functools.partial(_bottom_int8_kernel, relu)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_b, dp), lambda m, i: (m, i, 0)),
+            pl.BlockSpec((1, 1, block_b), lambda m, i: (m, 0, i)),
+            pl.BlockSpec((1, dp, op), lambda m, i: (m, 0, 0)),  # resident
+            pl.BlockSpec((1, 1, op), lambda m, i: (m, 0, 0)),
+            pl.BlockSpec((1, 1, op), lambda m, i: (m, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_b, op), lambda m, i: (m, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, bp, op), jnp.float32),
+        interpret=interpret,
+    )(xq, sx, wq, sw, b)
+
+
 # ------------------------------------------------- scalar-prefetch gather
 
 
@@ -132,3 +183,68 @@ def splitnn_bottom_gather_pallas(idx: jnp.ndarray, x: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((m, bp, op), jnp.float32),
         interpret=interpret,
     )(jnp.asarray(idx, jnp.int32), x, w, b)
+
+
+def _bottom_int8_gather_kernel(relu: bool, block_b: int, idx_ref,
+                               xq_ref, sx_ref, wq_ref, sw_ref, b_ref,
+                               out_ref):
+    i = pl.program_id(1)
+    dp = xq_ref.shape[2]
+
+    def gather_row(r, acc):
+        j = idx_ref[i * block_b + r]              # prefetched schedule slot
+        row = xq_ref[0, pl.ds(j, 1), :]           # (1, dp) int8 dynamic slice
+        return jax.lax.dynamic_update_slice(acc, row, (r, 0))
+
+    xq = jax.lax.fori_loop(0, block_b, gather_row,
+                           jnp.zeros((block_b, dp), jnp.int8))
+    acc = jax.lax.dot_general(xq, wq_ref[0], (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    scale = sx_ref[0].reshape(-1, 1) * sw_ref[0]
+    a = acc.astype(jnp.float32) * scale + b_ref[0]
+    out_ref[0] = jnp.maximum(a, 0.0) if relu else a
+
+
+def splitnn_bottom_int8_gather_pallas(idx: jnp.ndarray, xq: jnp.ndarray,
+                                      sx: jnp.ndarray, wq: jnp.ndarray,
+                                      sw: jnp.ndarray, b: jnp.ndarray, *,
+                                      relu: bool, block_b: int = 512,
+                                      interpret: bool = True) -> jnp.ndarray:
+    """int8 twin of :func:`splitnn_bottom_gather_pallas`.
+
+    The resident slab is int8 — 1 byte/element instead of 4 — so the
+    gather fusion stays within ``GATHER_VMEM_BUDGET`` at 4x the slab
+    rows of the f32 variant (ops.py admits with a 1-byte element size).
+    Per-row scales commute with the row gather, so ``sx`` here is the
+    ALREADY-GATHERED (M, 1, Bp) f32 scale vector for the scheduled rows
+    (the (B,)-long ``jnp.take`` on the tiny exponent vector happens
+    outside; only the wide (N, d) slab gather fuses into the kernel).
+    Row quantization of the slab is loop-invariant across the epoch
+    scan, so XLA hoists it out of the step loop — the slab is quantized
+    once per epoch, not once per step.
+    """
+    m, np_, dp = xq.shape
+    op = wq.shape[2]
+    bp = idx.shape[0]
+    assert bp % block_b == 0 and dp % 128 == 0 and op % 128 == 0, \
+        (m, bp, dp, op, block_b)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(m, bp // block_b),
+        in_specs=[
+            pl.BlockSpec((1, np_, dp), lambda m, i, idx_ref: (m, 0, 0)),
+            pl.BlockSpec((1, 1, block_b), lambda m, i, idx_ref: (m, 0, i)),
+            pl.BlockSpec((1, dp, op), lambda m, i, idx_ref: (m, 0, 0)),
+            pl.BlockSpec((1, 1, op), lambda m, i, idx_ref: (m, 0, 0)),
+            pl.BlockSpec((1, 1, op), lambda m, i, idx_ref: (m, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_b, op),
+                               lambda m, i, idx_ref: (m, i, 0)),
+    )
+    kernel = functools.partial(_bottom_int8_gather_kernel, relu, block_b)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, bp, op), jnp.float32),
+        interpret=interpret,
+    )(jnp.asarray(idx, jnp.int32), xq, sx, wq, sw, b)

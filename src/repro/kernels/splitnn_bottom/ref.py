@@ -23,3 +23,23 @@ def splitnn_bottom_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, *,
         a = a + bm
         return jnp.maximum(a, 0.0) if relu else a
     return jax.vmap(one)(x, w, b)
+
+
+def splitnn_bottom_int8_ref(xq: jnp.ndarray, sx: jnp.ndarray,
+                            wq: jnp.ndarray, sw: jnp.ndarray,
+                            b: jnp.ndarray, *, relu: bool) -> jnp.ndarray:
+    """int8 oracle (DESIGN.md §12): xq (M, Bp, dp) i8 with per-row f32
+    scales sx (M, 1, Bp), wq (M, dp, op) i8 with per-column f32 scales
+    sw (M, 1, op), b (M, 1, op) f32 -> (M, Bp, op) f32.
+
+    i8 x i8 -> i32 accumulation is exact, and the epilogue
+    ``acc * (sx · sw) + b`` is elementwise, so the Pallas twin must
+    match this BITWISE (same contract as the f32 triplet, but with no
+    reassociation latitude at all in the accumulator).
+    """
+    def one(xqm, sxm, wqm, swm, bm):
+        acc = jax.lax.dot_general(xqm, wqm, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.int32)
+        a = acc.astype(jnp.float32) * (sxm.reshape(-1, 1) * swm) + bm
+        return jnp.maximum(a, 0.0) if relu else a
+    return jax.vmap(one)(xq, sx, wq, sw, b)

@@ -1,0 +1,307 @@
+"""Quantized activation communication + mixed-precision scale management.
+
+DESIGN.md §12.  The per-step model-axis activation send is the last
+hot-path payload the 2-D train mesh pays in full f32 (the epoch scan
+does exactly ONE ``all_gather`` per step — PR 5/8 contract).  This
+module shrinks it ~4x by quantizing each client's bottom activations to
+a 1-byte wire dtype before the collective and dequantizing on the label
+owner:
+
+* **Scales are powers of two**, stored as one int8 *exponent* per
+  ``QUANT_BLOCK_ROWS``-row block per client.  A pow2 exponent costs 1
+  byte where an f32 scale would cost 4, which is what lets the packed
+  payload meet the contract's <= 0.3x bound even at activation width 1
+  (lr): ``(rows*width*1 + ceil(rows/8)) / (rows*width*4)`` = 0.28125.
+  Multiplying by ``exp2(+-e)`` is also exact in f32, so dequantize
+  introduces no rounding beyond the int8/fp8 cast itself.
+* **Exact zeros are preserved**: an all-zero block gets exponent 0 and
+  quantizes to 0, so pad-and-mask rows and dummy-client slabs stay
+  exactly zero through quantize -> gather -> dequantize.  The engine's
+  masking invariants (zero pad rows, ``acts[:m]`` dummy-client slice)
+  therefore survive unchanged.
+* **One collective, not two**: the wire values are flattened and
+  concatenated with the exponent bytes into a single int8 array per
+  shard, so the quantized program still lowers to exactly ONE
+  ``all_gather`` per step (fp8 payloads bitcast to int8 for the concat
+  — same itemsize, bit-exact round trip).
+* **Backward is straight-through (STE)**: the custom VJP of the
+  quantized gather is the plain f32 ``psum_scatter`` — the exact
+  transpose of the f32 ``all_gather`` it replaces — so the quantized
+  program keeps the f32 program's collective structure (1 all_gather
+  fwd + 1 reduce_scatter bwd) and trains with f32 activation
+  gradients.  ``round`` has zero gradient a.e.; STE is the standard
+  choice (documented in DESIGN.md §12).
+
+Off-mesh (``model_axis is None``) the same numerics run as
+``fake_quantize`` — quantize -> dequantize with an identity backward —
+so single-device runs, evaluation, and the serving engine are
+numerically representative of mesh runs (bitwise-identical when the
+local batch is a multiple of ``QUANT_BLOCK_ROWS``, which contiguous
+batch sharding guarantees for the CI meshes).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "FP8_DTYPE",
+    "QUANT_BLOCK_ROWS",
+    "all_gather_quantized",
+    "dequantize",
+    "dequantize_row_blocks",
+    "fake_quantize",
+    "pack_payload",
+    "payload_bytes",
+    "pow2_exponent",
+    "quantize_row_blocks",
+    "quantize_rows",
+    "quantize_columns",
+    "resolve_quant",
+    "scale_bytes_per_step",
+    "supported_quants",
+    "unpack_payload",
+    "wire_bytes",
+]
+
+# Rows per shared-exponent block for the comm path.  8 divides every
+# local batch the CI mesh matrix produces (B_loc in {8, 16, 32, 64}),
+# so per-block grouping is identical across mesh shapes and the
+# sharded/unsharded runs quantize bit-identically.
+QUANT_BLOCK_ROWS = 8
+
+# Largest representable magnitude per wire dtype (int8 symmetric range;
+# float8_e4m3fn finite max).
+_QMAX = {"int8": 127.0, "fp8": 448.0}
+
+# None in jax builds without float8 support; "fp8" is then rejected by
+# resolve_quant instead of failing deep inside a trace.
+FP8_DTYPE = getattr(jnp, "float8_e4m3fn", None)
+
+
+def supported_quants() -> Tuple[str, ...]:
+    """Wire dtypes this jax build can actually produce."""
+    return ("int8", "fp8") if FP8_DTYPE is not None else ("int8",)
+
+
+def resolve_quant(quant: Optional[str]) -> Optional[str]:
+    """Normalise a user-facing quant knob to None | 'int8' | 'fp8'."""
+    if quant in (None, "", "none", "f32", "fp32"):
+        return None
+    if quant not in ("int8", "fp8"):
+        raise ValueError(
+            f"unknown quant={quant!r}: expected None, 'int8' or 'fp8'")
+    if quant == "fp8" and FP8_DTYPE is None:
+        raise ValueError(
+            "quant='fp8' needs jnp.float8_e4m3fn, absent in this jax build")
+    return quant
+
+
+def wire_bytes(quant: Optional[str]) -> int:
+    """Bytes per communicated activation element (4 for f32)."""
+    return 1 if quant else 4
+
+
+def pow2_exponent(amax: jax.Array, quant: str) -> jax.Array:
+    """Smallest int8 exponent e with ``amax <= qmax * 2**e``.
+
+    ``frexp`` gives amax/qmax = mant * 2**expo with mant in [0.5, 1), so
+    ``expo - (mant == 0.5)`` is exactly ceil(log2(amax/qmax)) — no log2
+    rounding hazard.  amax == 0 maps to e = 0 (zero blocks quantize to
+    exact zero).  Clipped to int8 range; e = -127 still yields a normal
+    f32 scale, so dequantize stays exact.
+    """
+    mant, expo = jnp.frexp(amax / _QMAX[quant])
+    e = expo - (mant == 0.5).astype(expo.dtype)
+    e = jnp.where(amax > 0, e, 0)
+    return jnp.clip(e, -127, 127).astype(jnp.int8)
+
+
+def _exp2(e: jax.Array) -> jax.Array:
+    return jnp.exp2(e.astype(jnp.float32))
+
+
+def _encode(x: jax.Array, e: jax.Array, quant: str) -> jax.Array:
+    """Quantize f32 ``x`` against broadcastable int8 exponents ``e``."""
+    v = x * _exp2(-e.astype(jnp.int32))
+    if quant == "int8":
+        return jnp.clip(jnp.round(v), -127.0, 127.0).astype(jnp.int8)
+    return jnp.clip(v, -_QMAX["fp8"], _QMAX["fp8"]).astype(FP8_DTYPE)
+
+
+def dequantize(q: jax.Array, e: jax.Array) -> jax.Array:
+    """Wire values * 2**e, in f32 (broadcastable exponents)."""
+    return q.astype(jnp.float32) * _exp2(e)
+
+
+def quantize_rows(x: jax.Array, quant: str) -> Tuple[jax.Array, jax.Array]:
+    """Per-row (last axis reduced) symmetric quantization.
+
+    ``(..., d) f32 -> (q (..., d) wire, e (...) int8)``.  Used for the
+    int8 GEMM's activation operand: one shared exponent per sample row.
+    """
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    e = pow2_exponent(amax, quant)
+    return _encode(x, e[..., None], quant), e
+
+
+def quantize_columns(w: jax.Array, quant: str) -> Tuple[jax.Array, jax.Array]:
+    """Per-output-column symmetric quantization of packed weights.
+
+    ``(M, d, o) f32 -> (q (M, d, o) wire, e (M, o) int8)``: one shared
+    exponent per output column per client, so row scales x column
+    scales factor out of the i32 accumulator as a rank-1 f32 epilogue.
+    """
+    amax = jnp.max(jnp.abs(w), axis=1)
+    e = pow2_exponent(amax, quant)
+    return _encode(w, e[:, None, :], quant), e
+
+
+def _row_blocks(b: int, block_rows: int) -> int:
+    return -(-b // block_rows)
+
+
+def quantize_row_blocks(
+    acts: jax.Array, quant: str, block_rows: int = QUANT_BLOCK_ROWS,
+) -> Tuple[jax.Array, jax.Array]:
+    """Per-client, per-row-block quantization of activations.
+
+    ``(M, B, o) f32 -> (q (M, B, o) wire, e (M, nb) int8)`` with
+    ``nb = ceil(B / block_rows)``; a ragged tail block spans the
+    remaining rows (zero padding inside the block never changes its
+    amax, so the tail quantizes identically to a full block).
+    """
+    m, b, o = acts.shape
+    nb = _row_blocks(b, block_rows)
+    pad = nb * block_rows - b
+    xp = jnp.pad(acts, ((0, 0), (0, pad), (0, 0))) if pad else acts
+    blocks = xp.reshape(m, nb, block_rows * o)
+    e = pow2_exponent(jnp.max(jnp.abs(blocks), axis=-1), quant)
+    q = _encode(blocks, e[..., None], quant)
+    return q.reshape(m, nb * block_rows, o)[:, :b, :], e
+
+
+def dequantize_row_blocks(
+    q: jax.Array, e: jax.Array, block_rows: int = QUANT_BLOCK_ROWS,
+) -> jax.Array:
+    """Inverse of :func:`quantize_row_blocks` (up to wire rounding)."""
+    m, b, o = q.shape
+    nb = e.shape[1]
+    pad = nb * block_rows - b
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0))) if pad else q
+    x = dequantize(qp.reshape(m, nb, block_rows * o), e[..., None])
+    return x.reshape(m, nb * block_rows, o)[:, :b, :]
+
+
+def pack_payload(q: jax.Array, e: jax.Array) -> jax.Array:
+    """Flatten wire values + exponent bytes into ONE int8 array.
+
+    ``(q (M, B, o) wire, e (M, nb) int8) -> (M, B*o + nb) int8``.  The
+    activations and their scales ride the SAME collective, preserving
+    the exactly-one-all_gather-per-step contract; fp8 payloads bitcast
+    to int8 for the concat (same itemsize, bit-exact).
+    """
+    m, b, o = q.shape
+    if q.dtype != jnp.int8:
+        q = jax.lax.bitcast_convert_type(q, jnp.int8)
+    return jnp.concatenate([q.reshape(m, b * o), e], axis=1)
+
+
+def unpack_payload(
+    payload: jax.Array, b: int, o: int, quant: str,
+) -> Tuple[jax.Array, jax.Array]:
+    """Split a packed (gathered) payload back into (q, e)."""
+    m = payload.shape[0]
+    q = payload[:, : b * o].reshape(m, b, o)
+    if quant == "fp8":
+        q = jax.lax.bitcast_convert_type(q, FP8_DTYPE)
+    return q, payload[:, b * o :]
+
+
+def _gather_dequant(acts: jax.Array, axis_name: str, quant: str) -> jax.Array:
+    q, e = quantize_row_blocks(acts, quant)
+    payload = jax.lax.all_gather(
+        pack_payload(q, e), axis_name, axis=0, tiled=True)
+    q, e = unpack_payload(payload, acts.shape[1], acts.shape[2], quant)
+    return dequantize_row_blocks(q, e)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def all_gather_quantized(acts: jax.Array, axis_name: str, quant: str) -> jax.Array:
+    """Quantized replacement for the model-axis activation all_gather.
+
+    Forward: quantize -> pack -> ONE tiled int8 ``all_gather`` ->
+    unpack -> dequantize; output is the f32 ``(M_tot, B, o)`` gathered
+    activations, same shape/dtype as the f32 collective it replaces.
+    Backward: straight-through — the plain f32 ``psum_scatter`` that is
+    the exact transpose of the f32 all_gather (DESIGN.md §12).
+    """
+    return _gather_dequant(acts, axis_name, quant)
+
+
+def _agq_fwd(acts, axis_name, quant):
+    return _gather_dequant(acts, axis_name, quant), None
+
+
+def _agq_bwd(axis_name, quant, _res, g):
+    del quant  # STE: gradient bypasses the quantize -> dequantize pair
+    return (jax.lax.psum_scatter(g, axis_name, scatter_dimension=0, tiled=True),)
+
+
+all_gather_quantized.defvjp(_agq_fwd, _agq_bwd)
+
+
+def _fake_quantize_impl(acts: jax.Array, quant: str) -> jax.Array:
+    q, e = quantize_row_blocks(acts, quant)
+    return dequantize_row_blocks(q, e)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def fake_quantize(acts: jax.Array, quant: str) -> jax.Array:
+    """Off-mesh quantize -> dequantize with an identity backward (STE).
+
+    Applied where the mesh path would gather (``model_axis is None``)
+    so single-device training/eval/serving sees exactly the wire
+    rounding a mesh run sees, while the gradient matches the mesh
+    path's f32 psum_scatter-only backward.
+    """
+    return _fake_quantize_impl(acts, quant)
+
+
+def _fq_fwd(acts, quant):
+    return _fake_quantize_impl(acts, quant), None
+
+
+def _fq_bwd(quant, _res, g):
+    del quant
+    return (g,)
+
+
+fake_quantize.defvjp(_fq_fwd, _fq_bwd)
+
+
+def scale_bytes_per_step(rows: int, m_clients: int, quant: Optional[str]) -> int:
+    """Exponent bytes added to one step's gathered payload (0 for f32)."""
+    if not quant:
+        return 0
+    return _row_blocks(rows, QUANT_BLOCK_ROWS) * m_clients
+
+
+def payload_bytes(
+    width: int, rows: int, m_clients: int, quant: Optional[str],
+) -> int:
+    """Modeled fwd activation payload for one step's client->server send.
+
+    ``rows * width`` elements per client in the wire dtype, plus one
+    exponent byte per row block per client when quantized.  Uses the
+    LOGICAL batch rows (not the padded device shape) so the figure is
+    mesh-invariant, matching the rest of the modeled comm accounting;
+    the static census separately measures the padded lowered shapes.
+    """
+    per_client = rows * width * wire_bytes(quant)
+    if quant:
+        per_client += _row_blocks(rows, QUANT_BLOCK_ROWS)
+    return per_client * m_clients

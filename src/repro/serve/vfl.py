@@ -90,6 +90,7 @@ class ServeStats(StatsMixin):
     forced_splits: int = 0
     slots: int = 0
     bottom_impl: str = "ref"
+    quant: str = "none"
 
     CONTRACT_FIELDS = ("dispatches", "admitted_rows", "padded_slots",
                        "occupancy_sum", "completed", "forced_splits")
@@ -139,7 +140,8 @@ class VFLScoringEngine:
 
     def __init__(self, params, cfg, feature_dims: Optional[Sequence[int]]
                  = None, *, slots: int = 64, bottom_impl: str = "ref",
-                 block_b: Optional[int] = None, max_defer: int = 2):
+                 block_b: Optional[int] = None, max_defer: int = 2,
+                 quant: Optional[str] = None):
         if feature_dims is None:
             feature_dims = [bp["w"].shape[0] for bp in params["bottoms"]]
         self.cfg = cfg
@@ -148,10 +150,13 @@ class VFLScoringEngine:
         self.d_max = max(self.feature_dims)
         self.slots = int(slots)
         self.max_defer = int(max_defer)
+        # quant routes scoring through the SAME wire rounding quantized
+        # training used (fake-quantized bottom acts, DESIGN.md §12)
         self.packed, self._score = make_score_step(
             params, cfg, self.feature_dims, bottom_impl=bottom_impl,
-            block_b=int(block_b or slots))
-        self.stats = ServeStats(slots=self.slots, bottom_impl=bottom_impl)
+            block_b=int(block_b or slots), quant=quant)
+        self.stats = ServeStats(slots=self.slots, bottom_impl=bottom_impl,
+                                quant=quant or "none")
         self._xbuf = np.zeros((self.m, self.slots, self.d_max), np.float32)
         self._slot_req: List[Optional[_Pending]] = [None] * self.slots
         self._slot_row = np.zeros(self.slots, np.int64)
@@ -300,7 +305,8 @@ class VFLScoringEngine:
 
 
 def score_partition(params, cfg, partition, *, block_b: int = 512,
-                    bottom_impl: str = "ref") -> np.ndarray:
+                    bottom_impl: str = "ref",
+                    quant: Optional[str] = None) -> np.ndarray:
     """Score a whole ``VerticalPartition`` through fixed-shape batches.
 
     The batched replacement for the historical one-dispatch
@@ -320,7 +326,8 @@ def score_partition(params, cfg, partition, *, block_b: int = 512,
         return np.zeros((0, o), np.float32)
     bs = min(int(block_b), n)
     packed, score = make_score_step(params, cfg, fd,
-                                    bottom_impl=bottom_impl, block_b=bs)
+                                    bottom_impl=bottom_impl, block_b=bs,
+                                    quant=quant)
     slab = pack_slab(partition.client_features)          # (M, N, d_max)
     buf = np.zeros((slab.shape[0], bs, slab.shape[2]), np.float32)
     outs = []

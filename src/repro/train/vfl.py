@@ -65,6 +65,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.kernels.padding import round_up
 from repro.obs.metrics import StatsMixin
 from repro.obs.trace import span
+from repro.quant import (all_gather_quantized, fake_quantize, payload_bytes,
+                         resolve_quant, scale_bytes_per_step)
 from repro.sharding import padded_rows, resolve_train_mesh, spec_shard_map
 from repro.train.optimizer import adam_init, adam_update
 
@@ -86,6 +88,12 @@ class EngineStats(StatsMixin):
     ``StatsMixin`` (DESIGN.md §10) supplies ``to_dict``/``as_row`` and
     ``emit(registry)``; ``CONTRACT_FIELDS`` names the raw counters the
     CI perf contract derives its per-epoch ratios from.
+
+    ``quant`` is the activation wire dtype ("none" = f32) and
+    ``gather_payload_bytes`` the modeled per-step forward activation
+    payload (values + pow2-exponent scale bytes when quantized) at the
+    LOGICAL batch size — mesh-invariant, like ``comm_bytes``; the
+    contract gate checks the quantized rows shrink it <= 0.3x vs f32.
     """
     dispatches: int = 0
     host_syncs: int = 0
@@ -96,6 +104,8 @@ class EngineStats(StatsMixin):
     bottom_impl: str = "ref"
     model_shards: int = 1
     fused_gather: bool = False
+    quant: str = "none"
+    gather_payload_bytes: int = 0
 
     CONTRACT_FIELDS = ("dispatches", "host_syncs", "steps_per_epoch")
 
@@ -176,7 +186,8 @@ def unpack_slab_params(packed, feature_dims: Sequence[int]):
 
 def forward_slab_packed(packed, cfg, m: int, x_slab: jnp.ndarray, *,
                         bottom_impl: str = "ref", block_b: int = 512,
-                        idx=None, model_axis: Optional[str] = None):
+                        idx=None, model_axis: Optional[str] = None,
+                        quant: Optional[str] = None):
     """SplitNN forward from slab-form params.
 
     ``x_slab`` is the local (M_loc, B, d_max) batch slab — or, with
@@ -187,6 +198,15 @@ def forward_slab_packed(packed, cfg, m: int, x_slab: jnp.ndarray, *,
     one ``all_gather`` (DESIGN.md §8); padded dummy clients are sliced
     off before the top model.  Matches ``splitnn_forward`` on the
     equivalent per-client slices (zero padding is exact).
+
+    ``quant`` ("int8"|"fp8", DESIGN.md §12) narrows the activation send
+    to a 1-byte wire dtype: the bottom pass runs the int8 kernel twins
+    (int8 mode), and the collective becomes the quantized all_gather —
+    still exactly ONE collective per step (scales ride in the same
+    payload).  Off-mesh the same wire rounding applies via
+    ``fake_quantize``, so single-device runs match mesh runs.  Dummy
+    clients' all-zero activations quantize to exact zero, so the
+    ``acts[:m]`` invariant is unchanged.
     """
     from repro.kernels.splitnn_bottom.ops import splitnn_bottom
 
@@ -196,10 +216,16 @@ def forward_slab_packed(packed, cfg, m: int, x_slab: jnp.ndarray, *,
     if b is None:
         b = jnp.zeros((w.shape[0], o), jnp.float32)
     relu = cfg.model == "mlp"
-    acts = splitnn_bottom(x_slab, w, b, relu, bottom_impl, block_b, idx)
+    acts = splitnn_bottom(x_slab, w, b, relu, bottom_impl, block_b, idx,
+                          quant)
     if model_axis is not None:
         # §3 "send activations to the server": one collective per step
-        acts = jax.lax.all_gather(acts, model_axis, axis=0, tiled=True)
+        if quant is None:
+            acts = jax.lax.all_gather(acts, model_axis, axis=0, tiled=True)
+        else:
+            acts = all_gather_quantized(acts, model_axis, quant)
+    elif quant is not None:
+        acts = fake_quantize(acts, quant)
     acts = acts[:m]                              # drop dummy-client padding
     bsz = acts.shape[1]
     if cfg.model in ("lr", "linreg"):
@@ -211,7 +237,8 @@ def forward_slab_packed(packed, cfg, m: int, x_slab: jnp.ndarray, *,
 
 
 def forward_slab_eval(packed, cfg, m: int, x_slab: jnp.ndarray, *,
-                      bottom_impl: str = "ref", block_b: int = 512):
+                      bottom_impl: str = "ref", block_b: int = 512,
+                      quant: Optional[str] = None):
     """Serving/eval slab forward: the same packed-slab bottom pass as
     ``forward_slab_packed`` (the ``splitnn_bottom`` kernel), but with the
     top combination BITWISE-matching ``splitnn_forward``'s per-client
@@ -220,7 +247,12 @@ def forward_slab_eval(packed, cfg, m: int, x_slab: jnp.ndarray, *,
     the loop's left-folded python ``sum``; the scoring path's contract
     is bitwise equality with the legacy forward on full batches, so the
     client sum unrolls here (mlp's transpose/reshape + top GEMMs are
-    already elementwise-identical to concat-then-matmul)."""
+    already elementwise-identical to concat-then-matmul).
+
+    With ``quant`` the scoring path applies the SAME wire rounding as
+    quantized training (``fake_quantize`` after the bottom pass), so a
+    model trained with ``quant=`` is served with identical numerics —
+    the serve-vs-train bottom agreement contract of DESIGN.md §12."""
     from repro.kernels.splitnn_bottom.ops import splitnn_bottom
 
     w = packed["bw"]
@@ -229,7 +261,10 @@ def forward_slab_eval(packed, cfg, m: int, x_slab: jnp.ndarray, *,
     if b is None:
         b = jnp.zeros((w.shape[0], o), jnp.float32)
     relu = cfg.model == "mlp"
-    acts = splitnn_bottom(x_slab, w, b, relu, bottom_impl, block_b)
+    acts = splitnn_bottom(x_slab, w, b, relu, bottom_impl, block_b, None,
+                          quant)
+    if quant is not None:
+        acts = fake_quantize(acts, quant)
     acts = acts[:m]                              # drop dummy-client padding
     if cfg.model in ("lr", "linreg"):
         out = acts[0]
@@ -243,20 +278,23 @@ def forward_slab_eval(packed, cfg, m: int, x_slab: jnp.ndarray, *,
 
 
 @functools.lru_cache(maxsize=32)
-def _score_step_fn(cfg, m: int, bottom_impl: str, block_b: int):
+def _score_step_fn(cfg, m: int, bottom_impl: str, block_b: int,
+                   quant: Optional[str] = None):
     """One jitted scoring executable per (config, client-count, impl,
-    block) — shared by every engine/eval call with the same signature so
-    repeated ``predict``/engine construction never recompiles.  Bounded
-    (and clearable via ``clear_program_caches``) so stale executables
-    don't accumulate for process lifetime."""
+    block, quant) — shared by every engine/eval call with the same
+    signature so repeated ``predict``/engine construction never
+    recompiles.  Bounded (and clearable via ``clear_program_caches``)
+    so stale executables don't accumulate for process lifetime."""
     def score(packed, x_slab):
         return forward_slab_eval(packed, cfg, m, x_slab,
-                                 bottom_impl=bottom_impl, block_b=block_b)
+                                 bottom_impl=bottom_impl, block_b=block_b,
+                                 quant=quant)
     return jax.jit(score)
 
 
 def make_score_step(params, cfg, feature_dims: Sequence[int], *,
-                    bottom_impl: str = "ref", block_b: int = 512):
+                    bottom_impl: str = "ref", block_b: int = 512,
+                    quant: Optional[str] = None):
     """``TrainReport.params`` (model-zoo form) → ``(packed, score_step)``:
     the slab-params handoff for serving (DESIGN.md §9).
 
@@ -269,7 +307,8 @@ def make_score_step(params, cfg, feature_dims: Sequence[int], *,
     """
     fd = tuple(int(d) for d in feature_dims)
     packed = pack_slab_params(params, max(fd))
-    return packed, _score_step_fn(cfg, len(fd), bottom_impl, int(block_b))
+    return packed, _score_step_fn(cfg, len(fd), bottom_impl, int(block_b),
+                                  resolve_quant(quant))
 
 
 # -------------------------------------------------------------- loss sums
@@ -359,6 +398,7 @@ class EpochProgram:
     pspec: Any = None
     ospec: Any = None
     data_specs: Tuple = ()
+    quant: Optional[str] = None      # activation wire dtype (None = f32)
 
     def pin_carry(self, params, opt):
         if self.mesh is None:
@@ -401,7 +441,8 @@ class EpochProgram:
 def make_epoch_fn(cfg, feature_dims: Tuple[int, ...], mesh,
                   data_axis: Optional[str], model_axis: Optional[str],
                   n_data: int, n_model: int, bottom_impl: str,
-                  block_b: int, fuse_gather: bool) -> EpochProgram:
+                  block_b: int, fuse_gather: bool,
+                  quant: Optional[str] = None) -> EpochProgram:
     """The epoch-step program factory: every argument is hashable, so
     one jitted executable (and its XLA compile-cache entry) serves every
     ``train_scan`` call with the same (config, layout, mesh) — the
@@ -432,10 +473,11 @@ def make_epoch_fn(cfg, feature_dims: Tuple[int, ...], mesh,
                 return forward_slab_packed(p, cfg, m, xs_arrays[0],
                                            bottom_impl=bottom_impl,
                                            block_b=block_b, idx=ib,
-                                           model_axis=maxis)
+                                           model_axis=maxis, quant=quant)
             return forward_slab_packed(p, cfg, m, xs_arrays[0][:, ib, :],
                                        bottom_impl=bottom_impl,
-                                       block_b=block_b, model_axis=maxis)
+                                       block_b=block_b, model_axis=maxis,
+                                       quant=quant)
         return models.splitnn_forward(p, cfg, [x[ib] for x in xs_arrays])
 
     def epoch_body(params, opt, idx, mask, arrays, *, sharded):
@@ -535,14 +577,14 @@ def make_epoch_fn(cfg, feature_dims: Tuple[int, ...], mesh,
         fuse_gather=fuse_gather, use_slab=use_slab,
         n_data_arrays=n_data_arrays, m_pad=m_pad, d_eff=d_eff,
         param_shapes=param_shapes, pspec=pspec, ospec=ospec,
-        data_specs=data_specs)
+        data_specs=data_specs, quant=quant)
 
 
 def train_scan(partition, cfg, *, sample_weights: Optional[np.ndarray] = None,
                bandwidth: float = 10e9 / 8, latency: float = 2e-4,
                mesh=None, shard_axis: Optional[str] = None,
                bottom_impl: str = "ref", block_b: int = 512,
-               fuse_gather: bool = True,
+               fuse_gather: bool = True, quant: Optional[str] = None,
                verbose: bool = False) -> TrainReport:
     """Scan-based mini-batch Adam training to the paper's convergence
     criterion — one dispatch and one host sync per EPOCH.
@@ -556,7 +598,9 @@ def train_scan(partition, cfg, *, sample_weights: Optional[np.ndarray] = None,
     ``mesh`` shards the per-step batch axis over ``data`` and, on a 2-D
     ``(data, model)`` mesh, the M-client bottom axis over ``model``
     (DESIGN.md §8); results match single-device within reassociation
-    ulps either way.
+    ulps either way.  ``quant`` ("int8"|"fp8", DESIGN.md §12) narrows
+    the per-step activation send to a 1-byte wire dtype (int8 also runs
+    the int8 bottom kernels); needs the slab bottom path.
     """
     from repro.core import splitnn as models
 
@@ -573,10 +617,16 @@ def train_scan(partition, cfg, *, sample_weights: Optional[np.ndarray] = None,
         raise ValueError(
             "model-axis sharding needs the slab bottom path "
             "(bottom_impl='ref'|'pallas'), not 'loop'")
+    quant = resolve_quant(quant)
+    if quant is not None and not use_slab:
+        raise ValueError(
+            "quantized activations need the slab bottom path "
+            "(bottom_impl='ref'|'pallas'), not 'loop'")
 
     prog = make_epoch_fn(cfg, tuple(int(d) for d in feature_dims), mesh,
                          data_axis, model_axis, n_data, n_model,
-                         bottom_impl, int(block_b), bool(fuse_gather))
+                         bottom_impl, int(block_b), bool(fuse_gather),
+                         quant)
     m_pad = prog.m_pad                           # dummy clients (§8)
 
     def fresh_params():
@@ -634,11 +684,21 @@ def train_scan(partition, cfg, *, sample_weights: Optional[np.ndarray] = None,
     params, opt = prog.pin_carry(params, adam_init(params))
 
     rng = np.random.default_rng(cfg.seed)
-    per_sample = models.activation_bytes_per_sample(cfg, m)
+    # per-sample traffic derives from the wire dtype; the per-row-block
+    # exponent bytes of a quantized payload are per STEP (they scale
+    # with row blocks, not rows) and ride in per_epoch_bytes below.
+    # Both use the LOGICAL bs so the figures are mesh-invariant.
+    per_sample = models.activation_bytes_per_sample(cfg, m, quant)
+    width = models.activation_width(cfg)
+    scale_overhead = scale_bytes_per_step(bs, m, quant)
+    per_epoch_bytes = per_sample * n + steps_per_epoch * scale_overhead
     stats = EngineStats(shards=n_data, steps_per_epoch=steps_per_epoch,
                         padded_batch=padded_bs, engine="scan",
                         bottom_impl=bottom_impl, model_shards=n_model,
-                        fused_gather=use_slab and fuse_gather)
+                        fused_gather=use_slab and fuse_gather,
+                        quant=quant or "none",
+                        gather_payload_bytes=payload_bytes(
+                            width, bs, m, quant))
     losses: List[float] = []
     comm_bytes = 0
     total_steps = 0
@@ -651,14 +711,14 @@ def train_scan(partition, cfg, *, sample_weights: Optional[np.ndarray] = None,
         # reads the host clock only, so the engine's dispatch/sync
         # contract is identical traced or not (tests/test_obs.py)
         with span("train.epoch", epoch=epoch, engine="scan",
-                  steps=steps_per_epoch, comm_bytes=per_sample * n) as sp:
+                  steps=steps_per_epoch, comm_bytes=per_epoch_bytes) as sp:
             params, opt, ep_loss = jitted(params, opt, idx, mask, *arrays)
             stats.dispatches += 1
             losses.append(float(ep_loss))  # the single host sync this epoch
             stats.host_syncs += 1
             sp.set(loss=losses[-1])
         total_steps += steps_per_epoch
-        comm_bytes += per_sample * n    # every row trains, remainder too
+        comm_bytes += per_epoch_bytes   # every row trains, remainder too
         if verbose and epoch % 10 == 0:
             print(f"  epoch {epoch}: loss {losses[-1]:.5f}")
         wlen = cfg.convergence_window
@@ -740,9 +800,13 @@ def train_loop(partition, cfg, *, sample_weights: Optional[np.ndarray] = None,
 
     rng = np.random.default_rng(cfg.seed)
     bs = min(cfg.batch_size, n)
-    per_sample = models.activation_bytes_per_sample(cfg, m)
+    # the legacy loop always communicates f32 activations (no quant
+    # knob); per_sample still derives from the wire dtype (quant=None)
+    per_sample = models.activation_bytes_per_sample(cfg, m, None)
     stats = EngineStats(shards=1, steps_per_epoch=-(-n // bs),
-                        padded_batch=bs, engine="loop", bottom_impl="loop")
+                        padded_batch=bs, engine="loop", bottom_impl="loop",
+                        gather_payload_bytes=payload_bytes(
+                            models.activation_width(cfg), bs, m, None))
     losses: List[float] = []
     comm_bytes = 0
     total_steps = 0

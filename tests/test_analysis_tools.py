@@ -297,14 +297,23 @@ def test_blocks_gather_fallback_boundary():
 def test_blocks_sorted_intersect_regimes():
     from repro.analysis.blocks import (SINGLE_PASS_CEILING,
                                        sorted_intersect_blocks)
-    small = sorted_intersect_blocks(1 << 18)
-    assert small.ok and small.resident_bytes == 48 * (1 << 18)
-    # the hardware gap: fits PALLAS_MAX_P but not 16 MB — flagged in note
-    gap = sorted_intersect_blocks(SINGLE_PASS_CEILING + 1)
-    assert not gap.ok and "PALLAS_MAX_P" in gap.note
+    from repro.kernels.sorted_intersect.kernel import (PALLAS_MAX_P,
+                                                       SINGLE_PASS_MAX_P)
+    # admission boundary: the largest admitted single-pass P fits the
+    # 48 B/element block under 16 MB; one element more routes tiled
+    assert SINGLE_PASS_MAX_P <= SINGLE_PASS_CEILING < PALLAS_MAX_P
+    at = sorted_intersect_blocks(SINGLE_PASS_MAX_P)
+    assert at.ok and not at.note
+    assert at.resident_bytes == 48 * SINGLE_PASS_MAX_P
+    over = sorted_intersect_blocks(SINGLE_PASS_MAX_P + 1)
+    assert over.ok and "tiled" in over.note
+    # the old over-admission band (2^18.4 < P ≤ 2^19 launched single-
+    # pass past 16 MB) is retired: its powers of two now route tiled
+    first = sorted_intersect_blocks(1 << 19)
+    assert first.ok and "tiled" in first.note
     tiled = sorted_intersect_blocks(1 << 21)
     assert tiled.ok and "tiled" in tiled.note
-    assert tiled.resident_bytes == 4 * 4 * (2 * (1 << 19))
+    assert tiled.resident_bytes == 4 * 4 * (2 * PALLAS_MAX_P)
 
 
 def test_blocks_default_matrix_all_ok():
