@@ -1,0 +1,130 @@
+"""Fig. 7(d) — amortized cost of streaming delta-PSI vs full Tree-MPSI
+re-alignment under churn (repro.psi.delta, DESIGN.md §13).
+
+Protocol: m=4 parties at N ids each, bootstrap once, then apply K
+join/leave deltas of total size Δ = frac·N (half joins, half leaves)
+and compare the mean per-delta cost (simulated seconds and wire bytes
+from the shared MPSI cost model, plus measured wall time) against ONE
+full Tree-MPSI re-run over the final population.  Every delta is
+parity-checked: the coordinator's live aligned set must equal the
+plain sorted intersection of the parties' materialized sets.
+
+The gated curve runs the host protocol path, where the per-delta cost
+is genuinely O(Δ log N) end to end.  Self-gate: at Δ/N ≤ 1% the
+per-delta cost must be ≥10× below the full re-run on simulated
+seconds, wire bytes AND wall time — the amortization claim the figure
+exists to show.  A second, ungated section repeats the sweep on the
+batched device backend (``psi_backend="device"``, the mesh-sharded
+``psi/engine`` dispatch path) at engine-bench scale: there the WIRE
+cost still amortizes (bytes_speedup) while measured compute is
+dominated by the O(N)-lane batched index probe — interpreter-mode
+kernel overhead, as for fig7's engine-pallas rows.
+"""
+from __future__ import annotations
+
+import time
+from functools import reduce
+
+import numpy as np
+
+from benchmarks.common import emit, fmt
+from repro.config import AlignOptions
+from repro.core.mpsi import tree_mpsi
+from repro.data.synthetic import make_id_universe
+from repro.psi import DeltaMPSI
+
+M_PARTIES = 4
+FRACS = (0.001, 0.01, 0.1)          # Δ/N sweep
+GATE_FRAC = 0.01                    # ≥10x amortization gate at Δ/N <= 1%
+GATE_SPEEDUP = 10.0
+
+
+def _expected(dm: DeltaMPSI) -> np.ndarray:
+    return reduce(np.intersect1d,
+                  [dm.party_set(q) for q in range(dm.n_parties)])
+
+
+def _churn_sweep(n: int, options: AlignOptions, fig: str, deltas: int,
+                 gate: bool):
+    rows = []
+    for frac in FRACS:
+        sets, _ = make_id_universe(M_PARTIES, n, 0.7,
+                                   seed=int(frac * 10_000))
+        t0 = time.perf_counter()
+        dm = DeltaMPSI(sets, options=options, use_he=False, max_runs=3)
+        boot_wall = time.perf_counter() - t0
+        assert np.array_equal(dm.aligned, _expected(dm))
+
+        d = max(2, int(n * frac))
+        fresh = int(max(s.max() for s in sets)) + 1   # ids never seen yet
+        rng = np.random.default_rng(int(frac * 10_000) + 1)
+        # one untimed delta first: compiles the device dispatches so the
+        # measured rows don't charge jit time to the first delta
+        dm.apply_delta(0, joins=np.arange(fresh, fresh + d // 2,
+                                          dtype=np.int64))
+        fresh += d // 2
+        d_bytes, d_sim, d_wall = [], [], []
+        for k in range(deltas):
+            party = k % M_PARTIES
+            cur = dm.party_set(party)
+            joins = np.arange(fresh, fresh + d // 2, dtype=np.int64)
+            fresh += d // 2
+            leaves = rng.choice(cur, size=d - d // 2, replace=False)
+            b0, s0 = dm.stats.total_bytes, dm.stats.simulated_seconds
+            t0 = time.perf_counter()
+            dm.apply_delta(party, joins, leaves)
+            d_wall.append(time.perf_counter() - t0)
+            d_bytes.append(dm.stats.total_bytes - b0)
+            d_sim.append(dm.stats.simulated_seconds - s0)
+            assert np.array_equal(dm.aligned, _expected(dm)), \
+                f"delta-PSI parity broke at frac={frac} step={k}"
+
+        t0 = time.perf_counter()
+        full = tree_mpsi([dm.party_set(q) for q in range(M_PARTIES)],
+                         use_he=False, options=options)
+        full_wall = time.perf_counter() - t0
+        assert np.array_equal(np.asarray(full.intersection), dm.aligned)
+
+        # medians: robust to one-off jit compiles on the device path
+        sim_speedup = full.simulated_seconds / float(np.median(d_sim))
+        bytes_speedup = full.total_bytes / float(np.median(d_bytes))
+        wall_speedup = full_wall / float(np.median(d_wall))
+        rows.append(dict(
+            fig=fig, backend=options.psi_backend, n=n, m=M_PARTIES,
+            delta_frac=frac, delta_size=d, deltas=deltas,
+            delta_sim_seconds=fmt(float(np.median(d_sim)), 6),
+            full_sim_seconds=fmt(full.simulated_seconds, 6),
+            sim_speedup=fmt(sim_speedup, 1),
+            delta_mbytes=fmt(float(np.median(d_bytes)) / 1e6, 4),
+            full_mbytes=fmt(full.total_bytes / 1e6, 4),
+            bytes_speedup=fmt(bytes_speedup, 1),
+            delta_wall_seconds=fmt(float(np.median(d_wall)), 4),
+            full_wall_seconds=fmt(full_wall, 4),
+            wall_speedup=fmt(wall_speedup, 1),
+            bootstrap_wall_seconds=fmt(boot_wall, 4),
+            compactions=dm.stats.compactions))
+        if gate and frac <= GATE_FRAC:
+            assert min(sim_speedup, bytes_speedup,
+                       wall_speedup) >= GATE_SPEEDUP, \
+                (f"amortization gate: Δ/N={frac} speedups "
+                 f"sim={sim_speedup:.1f}x bytes={bytes_speedup:.1f}x "
+                 f"wall={wall_speedup:.1f}x < {GATE_SPEEDUP}x")
+    return rows
+
+
+def run(quick: bool = True, n: int | None = None, deltas: int = 6,
+        impl: str = "ref"):
+    n = n or (100_000 if quick else 300_000)
+    rows = _churn_sweep(
+        n, AlignOptions(protocol="oprf", psi_backend="host"),
+        fig="7d", deltas=deltas, gate=True)
+    rows += _churn_sweep(
+        n // 5 if quick else n,
+        AlignOptions(protocol="oprf", psi_backend="device", impl=impl),
+        fig="7d-device", deltas=deltas, gate=False)
+    emit(rows, "fig7_delta_psi")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

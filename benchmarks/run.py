@@ -19,8 +19,8 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (hours); default quick sizes")
     ap.add_argument("--only", default="",
-                    help="comma-list: fig7,table2,table2e2e,fig45,fig6,"
-                         "serve,roofline")
+                    help="comma-list: fig7,fig7delta,table2,table2e2e,fig45,"
+                         "fig6,serve,roofline")
     ap.add_argument("--static", action="store_true",
                     help="skip the dynamic sweep; run the static program "
                          "census (repro.analysis.check --census-only) and "
@@ -37,11 +37,12 @@ def main() -> None:
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import (beyond_minibatch, fig6_coreset, fig7_mpsi,
-                            fig45_ablation, roofline, serve_vfl,
-                            table2_framework)
+    from benchmarks import (beyond_minibatch, fig6_coreset,
+                            fig7_delta_psi, fig7_mpsi, fig45_ablation,
+                            roofline, serve_vfl, table2_framework)
     jobs = [
         ("fig7", fig7_mpsi.run),          # Fig 7 a/b/c: MPSI comparison
+        ("fig7delta", fig7_delta_psi.run),  # Fig 7d: delta-PSI amortization
         ("table2", table2_framework.run),  # Table 2: framework end-to-end
         ("table2e2e", table2_framework.run_e2e),  # Table 2: stage timings
         ("fig45", fig45_ablation.run),     # Figs 4&5: clusters + weighting

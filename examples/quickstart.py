@@ -8,6 +8,7 @@ coreset sizes, and test accuracy.
 """
 import numpy as np
 
+from repro.config import AlignOptions
 from repro.core import SplitNNConfig, run_pipeline
 from repro.data.synthetic import DatasetSpec, make_dataset
 from repro.data.vertical import partition_features
@@ -28,7 +29,8 @@ def main() -> None:
           f"{'coreset_s':>9s} {'train_s':>8s} {'total_s':>8s}")
     for variant in ("starall", "treeall", "starcss", "treecss"):
         rep = run_pipeline(train, test, cfg, variant=variant,
-                           clusters_per_client=10, protocol="oprf", seed=0)
+                           clusters_per_client=10, seed=0,
+                           align=AlignOptions(protocol="oprf"))
         print(f"{variant:9s} {rep.metric:6.3f} {rep.n_train:8d} "
               f"{rep.align_seconds:8.3f} {rep.coreset_seconds:9.3f} "
               f"{rep.train_seconds:8.3f} {rep.total_seconds:8.3f}")

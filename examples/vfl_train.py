@@ -10,6 +10,7 @@ convergence criterion → test evaluation. Prints the stage report.
 import argparse
 
 from benchmarks.common import dataset_partitions
+from repro.config import AlignOptions
 from repro.core import SplitNNConfig, run_pipeline
 
 
@@ -42,8 +43,8 @@ def main() -> None:
                         max_epochs=200, seed=args.seed)
     rep = run_pipeline(tr, te, cfg, variant=args.variant,
                        clusters_per_client=args.clusters,
-                       protocol=args.protocol,
-                       use_weights=not args.no_weights, seed=args.seed)
+                       use_weights=not args.no_weights, seed=args.seed,
+                       align=AlignOptions(protocol=args.protocol))
 
     metric_name = "MSE" if n_classes == 0 else "accuracy"
     print(f"\n=== {args.variant.upper()} on {args.dataset} "

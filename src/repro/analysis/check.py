@@ -103,8 +103,8 @@ def _psi_programs(meshes):
     import jax
     import jax.numpy as jnp
     from repro.analysis.census import census_program
-    from repro.psi.engine import _dispatch
-    from repro.sharding import resolve_batch_mesh
+    from repro.config import AlignOptions
+    from repro.psi.engine import _dispatch, dispatch_key
 
     sds = jax.ShapeDtypeStruct
     b, p = 8, 2048
@@ -112,13 +112,15 @@ def _psi_programs(meshes):
     n = sds((b,), jnp.int32)
     seeds = sds((b, 2), jnp.uint32)
     shapes = {"prf": (z, z, z, z, seeds), "merge": (z, z, z, z),
-              "single": (z, z, n, z, z, n, seeds)}
+              "single": (z, z, n, z, z, n, seeds),
+              "union": (z, z, z, z)}
     for mesh_name in _PSI_MESHES:
         if mesh_name not in meshes:
             continue
-        mesh, axis, _ = resolve_batch_mesh(meshes[mesh_name])
+        key, _ = dispatch_key(AlignOptions(impl="pallas",
+                                           mesh=meshes[mesh_name]))
         for kind, args in shapes.items():
-            fn = _dispatch(kind, "pallas", mesh, axis)
+            fn = _dispatch(kind, key)
             yield (f"psi.{kind}", mesh_name), census_program(fn, args)
 
 

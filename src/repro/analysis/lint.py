@@ -34,6 +34,15 @@ already been bitten by:
     builtin ``sum()`` is a deterministic left fold; ``jnp.sum`` over a
     stacked list re-associates under XLA and breaks bitwise claims.
 
+``config-sprawl``
+    A public top-level function growing more than 8 keyword-only
+    parameters without accepting a config object (a parameter named
+    ``options`` or ``align``).  Engine knobs accreted one kwarg at a
+    time until ``run_pipeline`` hit 17; the typed-config redesign
+    (``repro.config``, DESIGN.md §13) cleared every offender, and this
+    rule keeps the baseline EMPTY — new capability goes on
+    ``EngineOptions``/``AlignOptions`` fields, not on signatures.
+
 Suppression: a finding on line L is suppressed by ``# lint-ok: <rule>``
 (with an optional ``(reason)``) on line L or L-1.  Findings may also be
 accepted via a JSON baseline: a list of ``{"rule", "path", "symbol"}``
@@ -49,7 +58,10 @@ from pathlib import Path
 from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 RULES = ("host-sync", "call-time-jit", "unbounded-cache",
-         "bitwise-reassoc")
+         "bitwise-reassoc", "config-sprawl")
+
+MAX_ENGINE_KWARGS = 8      # config-sprawl threshold (strictly more fails)
+_OPTIONS_PARAMS = {"options", "align"}
 
 _SUPPRESS_RE = re.compile(r"#\s*lint-ok:\s*([a-z-]+)")
 
@@ -275,6 +287,22 @@ def lint_source(source: str, path: str) -> List[Finding]:
                     f"@jit on nested def '{qual}' rebuilds the wrapper "
                     "(and recompiles) on every enclosing call; hoist to "
                     "module level or an lru_cache'd factory")
+
+    # config-sprawl: public top-level defs accreting engine kwargs
+    # instead of taking an options object (repro.config)
+    for qual, fn in index.funcs.items():
+        if index.parents.get(qual) is not None:        # methods/nested: skip
+            continue
+        if fn.name.startswith("_"):
+            continue
+        n_kwonly = len(fn.args.kwonlyargs)
+        names = {a.arg for a in fn.args.args + fn.args.kwonlyargs}
+        if n_kwonly > MAX_ENGINE_KWARGS and not (names & _OPTIONS_PARAMS):
+            add("config-sprawl", fn.lineno,
+                f"public function '{qual}' takes {n_kwonly} keyword-only "
+                f"parameters (> {MAX_ENGINE_KWARGS}) and no "
+                "options/align config object — move engine knobs onto "
+                "repro.config.EngineOptions/AlignOptions")
 
     for node in ast.walk(tree):
         if not isinstance(node, ast.Call):

@@ -18,13 +18,18 @@ Volume-aware scheduling (paper §4.1 "Scheduling optimization"):
   sort active clients by ResLen ascending → pair c_k with c_{k+⌈U/2⌉} →
   RSA: smaller side is receiver; OPRF: larger side is receiver.
 
-Backends (DESIGN.md §6): ``backend="host"`` runs every pair as its own
-host TPSI session.  ``backend="device"`` hands each ROUND's concurrent
-pairs to ``repro.psi.engine`` as ONE padded, vmapped device dispatch
-(tag-eval + sorted-merge intersect) — ⌈log2 m⌉ dispatches for the whole
-tree; RSA bigint signing stays on host per pair.  Byte/message/rounds
-accounting is backend-invariant (both use tpsi's accounting helpers on
-the same canonical sets); only the measured compute seconds change.
+Backends (DESIGN.md §6): all three schedulers take one
+``options=AlignOptions(...)`` object (``repro.config``).
+``psi_backend="host"`` runs every pair as its own host TPSI session.
+``psi_backend="device"`` hands each ROUND's concurrent pairs to
+``repro.psi.engine`` as ONE padded, vmapped device dispatch (tag-eval +
+sorted-merge intersect) — ⌈log2 m⌉ dispatches for the whole tree; RSA
+bigint signing stays on host per pair.  Byte/message/rounds accounting
+is backend-invariant (both use tpsi's accounting helpers on the same
+canonical sets); only the measured compute seconds change.  Legacy
+``protocol=``/``backend=``/``engine_impl=``/``mesh=``/``shard_axis=``
+kwargs coerce through ``repro.config._coerce_options`` with a
+``DeprecationWarning``.
 """
 from __future__ import annotations
 
@@ -35,6 +40,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.config import ALIGN_ALIASES, AlignOptions, _coerce_options
 from repro.core import he
 from repro.core.tpsi import (ID_BYTES, TPSIResult, canonical_ids,
                              default_rsa_key, oprf_accounting,
@@ -110,9 +116,8 @@ def _greedy_pairs(order: Sequence[int]) -> Tuple[List[Tuple[int, int]],
 
 
 def _device_round(roles: List[Tuple[int, int]],
-                  holdings: Dict[int, np.ndarray], protocol: str,
-                  engine_impl: str, bandwidth: float, latency: float,
-                  mesh=None, shard_axis=None
+                  holdings: Dict[int, np.ndarray],
+                  options: AlignOptions, bandwidth: float, latency: float
                   ) -> Tuple[List[np.ndarray], int, int, float, float]:
     """Run one round's concurrent (sender, receiver) pairs as a single
     batched engine dispatch.
@@ -133,12 +138,11 @@ def _device_round(roles: List[Tuple[int, int]],
     net_secs: List[float] = []
     round_bytes = round_msgs = 0
 
-    if protocol == "oprf":
+    if options.protocol == "oprf":
         rng = oprf_session_rng()
         seeds = [oprf_seed_words(rng) for _ in roles]
         eng = psi_engine.oprf_round(senders, receivers, seeds,
-                                    impl=engine_impl, mesh=mesh,
-                                    shard_axis=shard_axis)
+                                    options=options)
         host_secs = [0.0] * len(roles)
         for s_ids, r_ids in zip(senders, receivers):
             b_s, b_r, msgs = oprf_accounting(len(s_ids), len(r_ids))
@@ -161,8 +165,7 @@ def _device_round(roles: List[Tuple[int, int]],
             round_msgs += msgs
             net_secs.append(_net_time(b_s + b_r, bandwidth, latency, msgs))
         eng = psi_engine.match_round(r_tags_l, r_vals_l, s_tags_l,
-                                     impl=engine_impl, mesh=mesh,
-                                     shard_axis=shard_axis)
+                                     options=options)
 
     compute = sum(host_secs) + eng.device_seconds
     makespan = (max(host_secs, default=0.0) + eng.device_seconds
@@ -170,16 +173,20 @@ def _device_round(roles: List[Tuple[int, int]],
     return eng.intersections, round_bytes, round_msgs, compute, makespan
 
 
-def tree_mpsi(id_sets: Sequence[np.ndarray], *, protocol: str = "rsa",
+def tree_mpsi(id_sets: Sequence[np.ndarray], *,
               volume_aware: bool = True,
               bandwidth: float = DEFAULT_BANDWIDTH,
               latency: float = DEFAULT_LATENCY,
-              use_he: bool = True, backend: str = "host",
-              engine_impl: str = "pallas", mesh=None,
-              shard_axis=None) -> MPSIStats:
+              use_he: bool = True,
+              options: AlignOptions | None = None, **legacy) -> MPSIStats:
     """Tree-MPSI over ``m`` id sets. O(log m) concurrent rounds; with
-    backend="device", O(log m) batched engine dispatches total, each
-    optionally sharded over a mesh axis (``mesh=``, DESIGN.md §5)."""
+    ``options.psi_backend="device"``, O(log m) batched engine dispatches
+    total, each optionally sharded over a mesh axis (``options.mesh``,
+    DESIGN.md §5)."""
+    (options,) = _coerce_options(
+        "tree_mpsi", legacy, ("options", AlignOptions, options,
+                              ALIGN_ALIASES))
+    protocol, backend = options.protocol, options.psi_backend
     m = len(id_sets)
     holdings: Dict[int, np.ndarray] = {i: canonical_ids(s) for i, s in
                                        enumerate(id_sets)}
@@ -219,8 +226,8 @@ def tree_mpsi(id_sets: Sequence[np.ndarray], *, protocol: str = "rsa",
                   backend=backend) as round_sp:
             if backend == "device":
                 inters, r_bytes, r_msgs, r_compute, r_makespan = \
-                    _device_round(roles, holdings, protocol, engine_impl,
-                                  bandwidth, latency, mesh, shard_axis)
+                    _device_round(roles, holdings, options,
+                                  bandwidth, latency)
                 for (sender, receiver), inter in zip(roles, inters):
                     holdings[receiver] = inter
                 total_bytes += r_bytes
@@ -266,15 +273,18 @@ def tree_mpsi(id_sets: Sequence[np.ndarray], *, protocol: str = "rsa",
         device_dispatches=dispatches)
 
 
-def path_mpsi(id_sets: Sequence[np.ndarray], *, protocol: str = "rsa",
+def path_mpsi(id_sets: Sequence[np.ndarray], *,
               bandwidth: float = DEFAULT_BANDWIDTH,
               latency: float = DEFAULT_LATENCY,
-              use_he: bool = True, backend: str = "host",
-              engine_impl: str = "pallas", mesh=None,
-              shard_axis=None) -> MPSIStats:
+              use_he: bool = True,
+              options: AlignOptions | None = None, **legacy) -> MPSIStats:
     """Path topology: client i TPSIs with client i+1 — O(m) sequential
     rounds (data-dependent, so the device backend runs one batch-of-one
     dispatch per hop)."""
+    (options,) = _coerce_options(
+        "path_mpsi", legacy, ("options", AlignOptions, options,
+                              ALIGN_ALIASES))
+    protocol, backend = options.protocol, options.psi_backend
     m = len(id_sets)
     cur = canonical_ids(id_sets[0])
     total_bytes = total_msgs = 0
@@ -285,8 +295,7 @@ def path_mpsi(id_sets: Sequence[np.ndarray], *, protocol: str = "rsa",
         with span("align.round", round=i - 1, pairs=1, topology="path",
                   protocol=protocol, backend=backend) as round_sp:
             res = run_tpsi(protocol, cur, np.asarray(id_sets[i]),
-                           backend=backend, engine_impl=engine_impl,
-                           mesh=mesh, shard_axis=shard_axis)
+                           options=options)
             round_sp.set(comm_bytes=res.total_bytes)
         cur = res.intersection
         total_bytes += res.total_bytes
@@ -307,12 +316,11 @@ def path_mpsi(id_sets: Sequence[np.ndarray], *, protocol: str = "rsa",
         device_dispatches=(m - 1) if backend == "device" else 0)
 
 
-def star_mpsi(id_sets: Sequence[np.ndarray], *, protocol: str = "rsa",
+def star_mpsi(id_sets: Sequence[np.ndarray], *,
               center: int = 0, bandwidth: float = DEFAULT_BANDWIDTH,
               latency: float = DEFAULT_LATENCY,
-              use_he: bool = True, backend: str = "host",
-              engine_impl: str = "pallas", mesh=None,
-              shard_axis=None) -> MPSIStats:
+              use_he: bool = True,
+              options: AlignOptions | None = None, **legacy) -> MPSIStats:
     """Star topology: the center TPSIs with every other client.
 
     O(1) logical rounds, but the central server engages the spokes one at a
@@ -322,6 +330,10 @@ def star_mpsi(id_sets: Sequence[np.ndarray], *, protocol: str = "rsa",
     the paper's "central bottleneck" critique. All traffic also crosses the
     center's NIC.
     """
+    (options,) = _coerce_options(
+        "star_mpsi", legacy, ("options", AlignOptions, options,
+                              ALIGN_ALIASES))
+    protocol, backend = options.protocol, options.psi_backend
     m = len(id_sets)
     cur = canonical_ids(id_sets[center])
     total_bytes = total_msgs = 0
@@ -336,8 +348,7 @@ def star_mpsi(id_sets: Sequence[np.ndarray], *, protocol: str = "rsa",
                   topology="star", protocol=protocol,
                   backend=backend) as round_sp:
             res = run_tpsi(protocol, np.asarray(id_sets[i]), cur,
-                           backend=backend, engine_impl=engine_impl,
-                           mesh=mesh, shard_axis=shard_axis)
+                           options=options)
             round_sp.set(comm_bytes=res.total_bytes)
         cur = res.intersection
         total_bytes += res.total_bytes

@@ -169,53 +169,56 @@ def activation_bytes_per_sample(cfg: SplitNNConfig, m_clients: int,
 def train_splitnn(partition: VerticalPartition, cfg: SplitNNConfig, *,
                   sample_weights: Optional[np.ndarray] = None,
                   bandwidth: float = 10e9 / 8, latency: float = 2e-4,
-                  verbose: bool = False, engine: str = "scan",
-                  mesh=None, shard_axis: Optional[str] = None,
-                  bottom_impl: str = "ref",
-                  block_b: int = 512,
-                  fuse_gather: bool = True,
-                  quant: Optional[str] = None) -> TrainReport:
+                  verbose: bool = False,
+                  options: Optional["EngineOptions"] = None,
+                  **legacy) -> TrainReport:
     """Mini-batch Adam training to the paper's convergence criterion.
 
-    Thin stage entry point over ``repro.train.vfl``:
+    Thin stage entry point over ``repro.train.vfl``.  Engine knobs live
+    on ``options=EngineOptions(...)`` (``repro.config``; legacy
+    ``engine=``/``mesh=``/``bottom_impl=``/... kwargs coerce through
+    the shared shim with a ``DeprecationWarning``, bitwise-identical):
 
-    - ``engine="scan"`` (default): compiled epoch engine — one dispatch
-      and one host sync per epoch, remainder batches pad-and-masked,
-      ``mesh=``/``shard_axis=`` shard the per-step batch axis over
-      ``data`` and (on a 2-D ``(data, model)`` mesh) the M-client
-      bottom axis over ``model`` (DESIGN.md §8), ``bottom_impl``
-      selects the block-diagonal bottom layer ("ref" slab oracle /
-      "pallas" fused kernel / "loop" per-client), and ``fuse_gather``
-      scalar-prefetches the per-step schedule indices into that pass
-      (bitwise-equal to the explicit ``slab[:, idx, :]`` gather).
-    - ``engine="loop"``: the legacy per-minibatch host loop (parity
-      oracle and dispatch-overhead baseline; single-device only, f32
-      only — ``quant`` needs the scan engine's slab path).
+    - ``train_engine="scan"`` (default): compiled epoch engine — one
+      dispatch and one host sync per epoch, remainder batches
+      pad-and-masked, ``mesh``/``shard_axis`` shard the per-step batch
+      axis over ``data`` and (on a 2-D ``(data, model)`` mesh) the
+      M-client bottom axis over ``model`` (DESIGN.md §8),
+      ``bottom_impl`` selects the block-diagonal bottom layer ("ref"
+      slab oracle / "pallas" fused kernel / "loop" per-client), and
+      ``fuse_gather`` scalar-prefetches the per-step schedule indices
+      into that pass (bitwise-equal to the explicit ``slab[:, idx, :]``
+      gather).
+    - ``train_engine="loop"``: the legacy per-minibatch host loop
+      (parity oracle and dispatch-overhead baseline; single-device
+      only, f32 only — ``quant`` needs the scan engine's slab path).
 
     ``quant`` ("int8"|"fp8", DESIGN.md §12) quantizes the per-step
     activation send (and, for int8, the bottom GEMM) to a 1-byte wire
     dtype with pow2 block scales.
     """
+    from repro.config import ENGINE_ALIASES, EngineOptions, _coerce_options
     from repro.quant import resolve_quant
     from repro.train import vfl
 
-    if engine == "loop":
-        if mesh is not None:
+    (options,) = _coerce_options(
+        "train_splitnn", legacy, ("options", EngineOptions, options,
+                                  ENGINE_ALIASES))
+    if options.train_engine == "loop":
+        if options.mesh is not None:
             raise ValueError("engine='loop' does not shard; use the scan "
                              "engine for mesh training")
-        if resolve_quant(quant) is not None:
+        if resolve_quant(options.quant) is not None:
             raise ValueError("engine='loop' communicates f32 only; use the "
                              "scan engine for quantized training")
         return vfl.train_loop(partition, cfg, sample_weights=sample_weights,
                               bandwidth=bandwidth, latency=latency,
                               verbose=verbose)
-    if engine != "scan":
-        raise ValueError(engine)
+    if options.train_engine != "scan":
+        raise ValueError(options.train_engine)
     return vfl.train_scan(partition, cfg, sample_weights=sample_weights,
-                          bandwidth=bandwidth, latency=latency, mesh=mesh,
-                          shard_axis=shard_axis, bottom_impl=bottom_impl,
-                          block_b=block_b, fuse_gather=fuse_gather,
-                          quant=quant, verbose=verbose)
+                          bandwidth=bandwidth, latency=latency,
+                          options=options, verbose=verbose)
 
 
 # ---------------------------------------------------------------- evaluation

@@ -41,6 +41,7 @@ from typing import Dict, List, Sequence, Set, Tuple
 
 import numpy as np
 
+from repro.config import ALIGN_ALIASES, AlignOptions, _coerce_options
 from repro.core import he
 
 # --------------------------------------------------------------- accounting
@@ -204,15 +205,20 @@ def rsa_match_inputs(receiver_ids: np.ndarray, receiver_sigs: List[int],
 
 
 def tpsi_rsa(sender_ids: Sequence[int], receiver_ids: Sequence[int], *,
-             key: RSAKey | None = None, backend: str = "host",
-             engine_impl: str = "pallas", mesh=None,
-             shard_axis=None) -> TPSIResult:
+             key: RSAKey | None = None,
+             options: AlignOptions | None = None, **legacy) -> TPSIResult:
     """RSA-blind-signature PSI. The RECEIVER learns the intersection.
 
-    Wire protocol/bytes: see ``rsa_accounting``.  backend="device" keeps
-    the bigint blind/sign/unblind on host and routes the signature-tag
-    matching through the batched sorted-intersect engine.
+    Wire protocol/bytes: see ``rsa_accounting``.  ``options``
+    (``repro.config.AlignOptions``) selects the backend:
+    ``psi_backend="device"`` keeps the bigint blind/sign/unblind on
+    host and routes the signature-tag matching through the batched
+    sorted-intersect engine.  Legacy ``backend=``/``engine_impl=``/
+    ``mesh=``/``shard_axis=`` kwargs coerce through the shared shim.
     """
+    (options,) = _coerce_options(
+        "tpsi_rsa", legacy, ("options", AlignOptions, options,
+                             ALIGN_ALIASES))
     key = key or default_rsa_key()
     s_ids = canonical_ids(sender_ids)
     r_ids = canonical_ids(receiver_ids)
@@ -220,13 +226,12 @@ def tpsi_rsa(sender_ids: Sequence[int], receiver_ids: Sequence[int], *,
     receiver_sigs, sender_sigs, t_sign, t_recv_crypto = rsa_sign_stage(
         key, s_ids, r_ids)
 
-    if backend == "device":
+    if options.psi_backend == "device":
         from repro.psi import engine as psi_engine
         r_tags, r_vals, s_tags = rsa_match_inputs(r_ids, receiver_sigs,
                                                   sender_sigs)
         rnd = psi_engine.match_round([r_tags], [r_vals], [s_tags],
-                                     impl=engine_impl, mesh=mesh,
-                                     shard_axis=shard_axis)
+                                     options=options)
         inter = rnd.intersections[0]
         t_match = rnd.device_seconds
     else:
@@ -268,9 +273,8 @@ def oprf_seed_words(rng) -> Tuple[int, int]:
 
 
 def tpsi_oprf(sender_ids: Sequence[int], receiver_ids: Sequence[int], *,
-              seed: int | None = None, backend: str = "host",
-              engine_impl: str = "pallas", mesh=None,
-              shard_axis=None) -> TPSIResult:
+              seed: int | None = None,
+              options: AlignOptions | None = None, **legacy) -> TPSIResult:
     """OPRF(OT-extension)-style PSI (KKRT pattern). The RECEIVER learns the
     intersection.
 
@@ -280,20 +284,24 @@ def tpsi_oprf(sender_ids: Sequence[int], receiver_ids: Sequence[int], *,
     that motivates the paper's "larger party should be the receiver" rule:
     the sender's transmission dominates, so the smaller party should send.
 
-    backend="device" evaluates the PRF with the Pallas psi_prf kernel and
-    intersects with the sorted-merge kernel in one dispatch; the wire/cost
-    model (OT traffic, h tags per sender element) is unchanged.
+    ``options.psi_backend="device"`` evaluates the PRF with the Pallas
+    psi_prf kernel and intersects with the sorted-merge kernel in one
+    dispatch; the wire/cost model (OT traffic, h tags per sender
+    element) is unchanged.  Legacy ``backend=``/``engine_impl=``/
+    ``mesh=``/``shard_axis=`` kwargs coerce through the shared shim.
     """
+    (options,) = _coerce_options(
+        "tpsi_oprf", legacy, ("options", AlignOptions, options,
+                              ALIGN_ALIASES))
     s_ids = canonical_ids(sender_ids)
     r_ids = canonical_ids(receiver_ids)
     rng = oprf_session_rng(seed)
 
-    if backend == "device":
+    if options.psi_backend == "device":
         from repro.psi import engine as psi_engine
         rnd = psi_engine.oprf_round([s_ids], [r_ids],
                                     [oprf_seed_words(rng)],
-                                    impl=engine_impl, mesh=mesh,
-                                    shard_axis=shard_axis)
+                                    options=options)
         inter = rnd.intersections[0]
         # one joint dispatch evaluates both parties' tags: split evenly
         t_send = t_recv = rnd.device_seconds / 2.0

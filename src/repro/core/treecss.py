@@ -18,6 +18,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.config import (ALIGN_ALIASES, ENGINE_ALIASES, AlignOptions,
+                          EngineOptions, _coerce_options)
 from repro.core.coreset import CoresetResult, cluster_coreset
 from repro.core.mpsi import MPSI, MPSIStats
 from repro.core.splitnn import (SplitNNConfig, TrainReport, evaluate,
@@ -84,9 +86,8 @@ class PipelineReport:
             self.train_wall_seconds)
 
 
-def _align(partition: VerticalPartition, topology: str, *, overlap: float,
-           protocol: str, seed: int, psi_backend: str = "host",
-           mesh=None, shard_axis: Optional[str] = None
+def _align(partition: VerticalPartition, topology: str, *,
+           align: AlignOptions, seed: int
            ) -> Tuple[VerticalPartition, MPSIStats, float, float]:
     """Run MPSI over per-client ID sets and restrict data to the aligned set.
 
@@ -106,13 +107,12 @@ def _align(partition: VerticalPartition, topology: str, *, overlap: float,
     engine speedups are visible in ``PipelineReport``."""
     n = partition.n_samples
     m = partition.n_clients
-    sets, _core = make_id_universe(m, n, overlap, seed=seed)
-    sp = span("align.mpsi", topology=topology, protocol=protocol,
-              backend=psi_backend, n_clients=m, n_ids=n)
+    sets, _core = make_id_universe(m, n, align.overlap, seed=seed)
+    sp = span("align.mpsi", topology=topology, protocol=align.protocol,
+              backend=align.psi_backend, n_clients=m, n_ids=n)
     t0 = now()
     with sp:
-        stats = MPSI[topology](sets, protocol=protocol, backend=psi_backend,
-                               mesh=mesh, shard_axis=shard_axis)
+        stats = MPSI[topology](sets, options=align)
     align_wall = now() - t0
     sp.set(comm_bytes=stats.total_bytes, rounds=stats.rounds,
            n_align=int(stats.intersection.shape[0]))
@@ -132,25 +132,25 @@ def run_pipeline(train_part: VerticalPartition,
                  cfg: SplitNNConfig, *,
                  variant: str = "treecss",
                  clusters_per_client: int = 12,
-                 overlap: float = 0.7,
-                 protocol: str = "rsa",
-                 psi_backend: str = "host",
                  use_weights: bool = True,
                  kmeans_impl: str = "ref",
                  seed: int = 0,
                  knn_k: int = 5,
-                 mesh=None,
-                 shard_axis: Optional[str] = None,
-                 train_engine: str = "scan",
-                 bottom_impl: str = "ref",
-                 fuse_gather: bool = True,
-                 block_b: int = 512,
-                 quant: Optional[str] = None,
-                 trace=None) -> PipelineReport:
-    """``mesh`` (with optional ``shard_axis``) now shards ALL THREE
+                 options: Optional[EngineOptions] = None,
+                 align: Optional[AlignOptions] = None,
+                 **legacy) -> PipelineReport:
+    """Engine knobs live on ``options=EngineOptions(...)``, alignment
+    knobs on ``align=AlignOptions(...)`` (``repro.config``; DESIGN.md
+    §13) — the 17-kwarg legacy surface still works through
+    ``_coerce_options`` (one ``DeprecationWarning``, bitwise-identical
+    results; property-tested in tests/test_config.py).
+
+    ``options.mesh`` (with optional ``shard_axis``) shards ALL THREE
     device-path stages through one knob, and accepts 1-D ``("data",)``
     or 2-D ``(data, model)`` meshes (``launch.mesh.make_train_mesh``):
-    the PSI engine's per-round pair batch (``psi_backend="device"``)
+    the PSI engine's per-round pair batch (``align.psi_backend=
+    "device"``; the alignment stage inherits the engine mesh via
+    ``AlignOptions.with_engine_defaults`` unless ``align.mesh`` is set)
     and the CSS batched client fit shard over ``data`` (replicating
     over ``model`` — byte-identical to single-device either way), and
     the SplitNN scan engine shards its per-step batch axis over
@@ -158,41 +158,44 @@ def run_pipeline(train_part: VerticalPartition,
     ``model`` (the client→server activation send lowers to one
     all-gather; DESIGN.md §8) — training matches single-device within
     gemm/psum-reassociation ulps (DESIGN.md §5, §7).
-    ``train_engine``/``bottom_impl`` select the training engine and the
-    block-diagonal bottom implementation ("pallas" = the fused
-    VMEM-resident kernel on real TPU), and ``fuse_gather``/``block_b``
-    thread through to ``train_splitnn`` unchanged (the scalar-prefetch
-    schedule-gather toggle and the bottom kernel's batch tile — both
-    were silently dropped here before, so pipeline callers could never
-    actually toggle the fusion).  Evaluation reuses ``block_b`` and, for
-    the slab impls, ``bottom_impl`` through the batched scoring path.
-    ``quant`` ("int8"|"fp8", DESIGN.md §12) quantizes the training
-    stage's per-step activation send (int8 also runs the int8 bottom
-    kernels); evaluation applies the same wire rounding, so the metric
-    reflects quantized inference of the quantized-trained model.
+    ``options.train_engine``/``bottom_impl`` select the training engine
+    and the block-diagonal bottom implementation ("pallas" = the fused
+    VMEM-resident kernel on real TPU); ``fuse_gather``/``block_b``
+    thread through to ``train_splitnn`` (the scalar-prefetch
+    schedule-gather toggle and the bottom kernel's batch tile).
+    Evaluation reuses ``block_b`` and, for the slab impls,
+    ``bottom_impl`` through the batched scoring path.
+    ``options.quant`` ("int8"|"fp8", DESIGN.md §12) quantizes the
+    training stage's per-step activation send (int8 also runs the int8
+    bottom kernels); evaluation applies the same wire rounding, so the
+    metric reflects quantized inference of the quantized-trained model.
 
-    ``trace`` turns on the observability layer (DESIGN.md §10): pass a
-    ``repro.obs.Tracer`` to collect this run's spans into it (sharing
-    one tracer across calls builds a single timeline), or any truthy
-    value to self-create one — either way the tracer comes back on
-    ``PipelineReport.tracer`` for Chrome-trace export.  Tracing only
+    ``options.trace`` turns on the observability layer (DESIGN.md §10):
+    pass a ``repro.obs.Tracer`` to collect this run's spans into it
+    (sharing one tracer across calls builds a single timeline), or any
+    truthy value to self-create one — either way the tracer comes back
+    on ``PipelineReport.tracer`` for Chrome-trace export.  Tracing only
     brackets host code already on the execution path, so engine
     counters (dispatches/host syncs) are unchanged by it."""
+    options, align = _coerce_options(
+        "run_pipeline", legacy,
+        ("options", EngineOptions, options, ENGINE_ALIASES),
+        ("align", AlignOptions, align, ALIGN_ALIASES))
+    align = align.with_engine_defaults(options)
     variant = variant.lower()
     topology = "tree" if variant.startswith("tree") else (
         "path" if variant.startswith("path") else "star")
     use_css = variant.endswith("css")
+    trace = options.trace
     tracer = trace if isinstance(trace, Tracer) else (
         Tracer() if trace else None)
 
     with use_tracer(tracer), span("pipeline.run", variant=variant,
                                   model=cfg.model, seed=seed):
-        with span("pipeline.align", topology=topology, protocol=protocol,
-                  backend=psi_backend):
+        with span("pipeline.align", topology=topology,
+                  protocol=align.protocol, backend=align.psi_backend):
             aligned, mpsi_stats, align_secs, align_wall = _align(
-                train_part, topology, overlap=overlap, protocol=protocol,
-                seed=seed, psi_backend=psi_backend, mesh=mesh,
-                shard_axis=shard_axis)
+                train_part, topology, align=align, seed=seed)
 
         coreset_res = None
         weights = None
@@ -214,8 +217,8 @@ def run_pipeline(train_part: VerticalPartition,
             with cs_sp:
                 coreset_res = cluster_coreset(
                     aligned, clusters_per_client, seed=seed,
-                    kmeans_impl=kmeans_impl, mesh=mesh,
-                    shard_axis=shard_axis)
+                    kmeans_impl=kmeans_impl, mesh=options.mesh,
+                    shard_axis=options.shard_axis)
             coreset_wall = now() - t0
             cs_sp.set(n_coreset=int(coreset_res.indices.shape[0]),
                       comm_bytes=coreset_res.comm_bytes)
@@ -245,25 +248,26 @@ def run_pipeline(train_part: VerticalPartition,
                                        params=None)
         else:
             tr_sp = span("pipeline.train", model=cfg.model,
-                         engine=train_engine, rows=train_data.n_samples)
+                         engine=options.train_engine,
+                         rows=train_data.n_samples)
             t0 = now()
             with tr_sp:
                 train_report = train_splitnn(
                     train_data, cfg, sample_weights=weights,
-                    mesh=mesh, shard_axis=shard_axis,
-                    engine=train_engine, bottom_impl=bottom_impl,
-                    fuse_gather=fuse_gather, block_b=block_b, quant=quant)
+                    options=options)
             train_wall = now() - t0
             tr_sp.set(comm_bytes=train_report.comm_bytes,
                       epochs=train_report.epochs)
             train_secs = (train_report.train_seconds
                           + train_report.simulated_comm_seconds)
-            eval_impl = (bottom_impl if bottom_impl in ("ref", "pallas")
+            eval_impl = (options.bottom_impl
+                         if options.bottom_impl in ("ref", "pallas")
                          else "ref")
             with span("pipeline.serve", rows=test_part.n_samples):
                 metric = evaluate(train_report.params, cfg, test_part,
-                                  block_b=block_b, bottom_impl=eval_impl,
-                                  quant=quant)
+                                  block_b=options.block_b,
+                                  bottom_impl=eval_impl,
+                                  quant=options.quant)
 
     return PipelineReport(
         variant=variant, mpsi=mpsi_stats, coreset=coreset_res,

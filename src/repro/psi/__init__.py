@@ -1,11 +1,41 @@
-"""Device-accelerated PSI engine (DESIGN.md §6).
+"""Device-accelerated PSI engine (DESIGN.md §6) + incremental alignment
+(DESIGN.md §13).
 
   engine — batched round executor: pads every TPSI pair of an MPSI
            round to one (pairs, P) batch and runs PRF tag evaluation +
            sorted-merge intersection in a single vmapped device
            dispatch per round.
-"""
-from repro.psi.engine import (EngineRound, match_round, oprf_round,
-                              tag_words)
+  delta  — LSM-style incremental alignment: per-party ``TagIndex``
+           (leveled sorted runs + tombstones) and the ``DeltaMPSI``
+           coordinator that keeps the live aligned set byte-identical
+           to a full Tree-MPSI re-run while touching only the delta.
 
-__all__ = ["EngineRound", "match_round", "oprf_round", "tag_words"]
+``run_psi`` is the topology-dispatching front door shared with the
+``repro.core.mpsi`` schedulers — one ``AlignOptions``-driven signature
+for tree/path/star.
+"""
+from repro.psi.delta import (AlignedDelta, DeltaMPSI, DeltaStats,
+                             TagIndex)
+from repro.psi.engine import (EngineRound, dispatch_key, match_round,
+                              oprf_round, tag_words, union_merge)
+
+
+def run_psi(id_sets, *, topology: str = "tree", options=None, **kw):
+    """Run an MPSI over ``id_sets`` with the given ``topology``
+    ("tree"|"path"|"star") and one ``options=AlignOptions(...)``
+    object; extra kwargs (``bandwidth=``, ``use_he=``, ...) pass
+    through to the scheduler.  Returns ``repro.core.mpsi.MPSIStats``.
+    """
+    from repro.core.mpsi import MPSI
+
+    if topology not in MPSI:
+        raise ValueError(f"unknown topology {topology!r}; "
+                         f"expected one of {sorted(MPSI)}")
+    if options is not None:
+        kw["options"] = options
+    return MPSI[topology](id_sets, **kw)
+
+
+__all__ = ["AlignedDelta", "DeltaMPSI", "DeltaStats", "EngineRound",
+           "TagIndex", "dispatch_key", "match_round", "oprf_round",
+           "run_psi", "tag_words", "union_merge"]

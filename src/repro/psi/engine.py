@@ -65,6 +65,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.config import ALIGN_ALIASES, AlignOptions, _coerce_options
 from repro.kernels.psi_prf.ops import prf_tags
 from repro.kernels.sorted_intersect.ops import (next_pow2, pack_keys,
                                                 sorted_intersect)
@@ -156,6 +157,19 @@ def _merge_batch(a_kh, a_kl, b_kh, b_kl, *, impl):
     return jax.vmap(one)(a_kh, a_kl, b_kh, b_kl)
 
 
+def _union_batch(a_kh, a_kl, b_kh, b_kl, *, impl):
+    """(B,P) pre-sorted key lanes -> (B,2P) merged (kh, kl) lanes: the
+    bitonic merge's *sorted union* of the two sides, pads (both
+    sentinels sort past any valid key) collected at the tail.  This is
+    the LSM run-compaction primitive of delta-PSI (repro.psi.delta):
+    the same ``sorted_intersect`` kernel the intersection path runs,
+    read for its merged lanes instead of (sel, rank)."""
+    def one(akh, akl, bkh, bkl):
+        _, _, m_kh, m_kl = sorted_intersect(akh, akl, bkh, bkl, impl=impl)
+        return m_kh, m_kl
+    return jax.vmap(one)(a_kh, a_kl, b_kh, b_kl)
+
+
 def _oprf_single(r_hi, r_lo, r_n, s_hi, s_lo, s_n, seeds, *, impl):
     """Single-dispatch (device-sort) path: PRF + lax.sort + merge +
     in-graph id recovery.  Returns (B,2P) (sel, cand_hi, cand_lo)."""
@@ -177,20 +191,36 @@ def _oprf_single(r_hi, r_lo, r_n, s_hi, s_lo, s_n, seeds, *, impl):
 
 
 _DISPATCH_BODY = {"prf": _prf_batch, "merge": _merge_batch,
-                  "single": _oprf_single}
+                  "single": _oprf_single, "union": _union_batch}
+
+
+def dispatch_key(options: AlignOptions) -> Tuple[AlignOptions, int]:
+    """Canonicalize an ``AlignOptions`` into the ``_dispatch`` cache key
+    plus the mesh-axis shard count.
+
+    Only the engine-relevant fields survive (impl + resolved mesh/axis);
+    protocol/backend/overlap/sort are reset to defaults so two configs
+    that lower to the same executable share one cache entry.  The key is
+    the frozen (hashable) config object itself — no hand-flattened
+    (impl, mesh, axis) tuple to drift from the config schema."""
+    mesh, axis, n_shards = resolve_batch_mesh(options.mesh,
+                                              options.shard_axis)
+    return AlignOptions(impl=options.impl, mesh=mesh,
+                        shard_axis=axis), n_shards
 
 
 @functools.lru_cache(maxsize=32)
-def _dispatch(kind: str, impl: str, mesh=None, axis: Optional[str] = None):
+def _dispatch(kind: str, key: AlignOptions):
     """Jitted executable for one dispatch kind, optionally shard_mapped
     so the pair batch splits over a mesh axis.  Cached per
-    (kind, impl, mesh, axis) so re-wrapping never re-jits; bounded (and
-    clearable via ``clear_dispatch_cache``) because the mesh-keyed
-    entries would otherwise pin Mesh objects and their executables for
-    process lifetime."""
-    fn = functools.partial(_DISPATCH_BODY[kind], impl=impl)
-    if mesh is not None:
-        fn = batch_shard_map(fn, mesh, axis)
+    (kind, canonical AlignOptions) — see ``dispatch_key`` — so
+    re-wrapping never re-jits; bounded (and clearable via
+    ``clear_dispatch_cache``) because the mesh-keyed entries would
+    otherwise pin Mesh objects and their executables for process
+    lifetime."""
+    fn = functools.partial(_DISPATCH_BODY[kind], impl=key.impl)
+    if key.mesh is not None:
+        fn = batch_shard_map(fn, key.mesh, key.shard_axis)
     return jax.jit(fn)
 
 
@@ -208,26 +238,25 @@ def clear_dispatch_cache() -> None:
 _warm_cache: set = set()
 
 
-def _warm(kind: str, b: int, p: int, impl: str, mesh=None,
-          axis: Optional[str] = None) -> None:
-    """Compile a (dispatch, pairs, P, impl, mesh) bucket outside the
-    timed region: jit keys on shapes/dtypes only, so a zeros-input call
-    builds the executable the subsequent timed call reuses."""
-    key = (kind, b, p, impl, mesh, axis)
-    if key in _warm_cache:
+def _warm(kind: str, b: int, p: int, key: AlignOptions) -> None:
+    """Compile a (dispatch, pairs, P, canonical options) bucket outside
+    the timed region: jit keys on shapes/dtypes only, so a zeros-input
+    call builds the executable the subsequent timed call reuses."""
+    wkey = (kind, b, p, key)
+    if wkey in _warm_cache:
         return
-    fn = _dispatch(kind, impl, mesh, axis)
+    fn = _dispatch(kind, key)
     z = np.zeros((b, p), np.uint32)
     n = np.zeros((b,), np.int32)
     seeds = np.zeros((b, 2), np.uint32)
     if kind == "prf":
         out = fn(z, z, z, z, seeds)
-    elif kind == "merge":
+    elif kind in ("merge", "union"):
         out = fn(z, z, z, z)
     else:
         out = fn(z, z, n, z, z, n, seeds)
     jax.block_until_ready(out)
-    _warm_cache.add(key)
+    _warm_cache.add(wkey)
 
 
 # --------------------------------------------------------- round executors
@@ -235,7 +264,7 @@ def _warm(kind: str, b: int, p: int, impl: str, mesh=None,
 def _host_sorted_merge(r_tags64: Sequence[np.ndarray],
                        receiver_ids: Sequence[np.ndarray],
                        s_tags64: Sequence[np.ndarray], p: int,
-                       impl: str, mesh=None, axis: Optional[str] = None,
+                       key: AlignOptions,
                        n_shards: int = 1) -> List[np.ndarray]:
     """Host-sort path shared by oprf_round and match_round: numpy-sort
     each pair's u64 tags, pack the padded key-lane batch, run the merge
@@ -258,7 +287,7 @@ def _host_sorted_merge(r_tags64: Sequence[np.ndarray],
     with span("align.dispatch", kind="merge", pairs=b, p=p,
               shards=n_shards):
         sel_rank = jax.block_until_ready(
-            _dispatch("merge", impl, mesh, axis)(*args))
+            _dispatch("merge", key)(*args))
     sel = np.asarray(sel_rank[0])[:b].astype(bool)
     rank = np.asarray(sel_rank[1])[:b]
     return [np.sort(ids_by_tag[i][rank[i][sel[i]] - 1])
@@ -268,22 +297,27 @@ def _host_sorted_merge(r_tags64: Sequence[np.ndarray],
 def oprf_round(sender_sets: Sequence[np.ndarray],
                receiver_sets: Sequence[np.ndarray],
                seeds: Sequence[Tuple[int, int]], *,
-               impl: str = "pallas",
-               sort: Optional[str] = None,
-               mesh=None, shard_axis: Optional[str] = None) -> EngineRound:
+               options: Optional[AlignOptions] = None,
+               **legacy) -> EngineRound:
     """One MPSI round of OPRF-flavor pairs, batched.
 
     ``seeds[i]`` is the pair's session key as two u32 words (the wire
     protocol still models the OT-extension seed agreement; see tpsi).
     Each receiver learns intersection(sender_sets[i], receiver_sets[i]).
-    With ``mesh``, the pair batch shards over one mesh axis (module
-    docstring) — intersections are byte-identical either way.
+    ``options`` (``repro.config.AlignOptions``) carries impl/sort/mesh:
+    with ``options.mesh``, the pair batch shards over one mesh axis
+    (module docstring) — intersections are byte-identical either way.
+    Legacy ``impl=``/``sort=``/``mesh=``/``shard_axis=`` kwargs coerce
+    through the shared deprecation shim.
     """
+    (options,) = _coerce_options(
+        "oprf_round", legacy, ("options", AlignOptions, options,
+                               ALIGN_ALIASES))
     b = len(sender_sets)
     if b == 0:
         return EngineRound([], 0.0, 0)
-    sort = _default_sort(sort)
-    mesh, axis, n_shards = resolve_batch_mesh(mesh, shard_axis)
+    sort = _default_sort(options.sort)
+    key, n_shards = dispatch_key(options)
     p = next_pow2(max(max((len(s) for s in sender_sets), default=0),
                       max((len(r) for r in receiver_sets), default=0), 1))
     s_hi, s_lo, s_n = _pack(sender_sets, p)
@@ -293,8 +327,8 @@ def oprf_round(sender_sets: Sequence[np.ndarray],
     if sort == "device":
         args, _ = pad_batch_rows(
             (r_hi, r_lo, r_n, s_hi, s_lo, s_n, seed_arr), n_shards)
-        _warm("single", args[0].shape[0], p, impl, mesh, axis)
-        fn = _dispatch("single", impl, mesh, axis)
+        _warm("single", args[0].shape[0], p, key)
+        fn = _dispatch("single", key)
         t0 = time.perf_counter()
         with span("align.dispatch", kind="single", pairs=b, p=p,
                   shards=n_shards):
@@ -309,9 +343,9 @@ def oprf_round(sender_sets: Sequence[np.ndarray],
 
     args, _ = pad_batch_rows((r_hi, r_lo, s_hi, s_lo, seed_arr), n_shards)
     bp = args[0].shape[0]
-    _warm("prf", bp, p, impl, mesh, axis)
-    _warm("merge", bp, p, impl, mesh, axis)
-    fn = _dispatch("prf", impl, mesh, axis)
+    _warm("prf", bp, p, key)
+    _warm("merge", bp, p, key)
+    fn = _dispatch("prf", key)
     t0 = time.perf_counter()
     with span("align.dispatch", kind="prf", pairs=b, p=p,
               shards=n_shards):
@@ -321,8 +355,8 @@ def oprf_round(sender_sets: Sequence[np.ndarray],
                               | tl[:n])
     r_tags = [join(r_th[i], r_tl[i], int(r_n[i])) for i in range(b)]
     s_tags = [join(s_th[i], s_tl[i], int(s_n[i])) for i in range(b)]
-    inters = _host_sorted_merge(r_tags, receiver_sets, s_tags, p, impl,
-                                mesh, axis, n_shards)
+    inters = _host_sorted_merge(r_tags, receiver_sets, s_tags, p, key,
+                                n_shards)
     return EngineRound(inters, time.perf_counter() - t0, 2,
                        shards=n_shards)
 
@@ -330,25 +364,62 @@ def oprf_round(sender_sets: Sequence[np.ndarray],
 def match_round(receiver_tags: Sequence[np.ndarray],
                 receiver_ids: Sequence[np.ndarray],
                 sender_tags: Sequence[np.ndarray], *,
-                impl: str = "pallas",
-                mesh=None, shard_axis: Optional[str] = None) -> EngineRound:
+                options: Optional[AlignOptions] = None,
+                **legacy) -> EngineRound:
     """One MPSI round of tag-matching pairs (RSA flavor: tags are
     host-computed truncated signatures, already in [0, 2^62)).  Tags
     originate on host, so sorting is always host-side: one merge
-    dispatch total."""
+    dispatch total.  ``receiver_ids[i]`` may be ANY int64 payload
+    aligned with ``receiver_tags[i]`` (delta-PSI encodes (id, live)
+    records this way); the matched payloads come back sorted."""
+    (options,) = _coerce_options(
+        "match_round", legacy, ("options", AlignOptions, options,
+                                ALIGN_ALIASES))
     b = len(receiver_tags)
     if b == 0:
         return EngineRound([], 0.0, 0)
-    mesh, axis, n_shards = resolve_batch_mesh(mesh, shard_axis)
+    key, n_shards = dispatch_key(options)
     p = next_pow2(max(max((len(t) for t in receiver_tags), default=0),
                       max((len(t) for t in sender_tags), default=0), 1))
-    _warm("merge", padded_rows(b, n_shards), p, impl, mesh, axis)
+    _warm("merge", padded_rows(b, n_shards), p, key)
     t0 = time.perf_counter()
     r_tags = [np.asarray(t, np.int64).astype(np.uint64)
               for t in receiver_tags]
     s_tags = [np.asarray(t, np.int64).astype(np.uint64)
               for t in sender_tags]
-    inters = _host_sorted_merge(r_tags, receiver_ids, s_tags, p, impl,
-                                mesh, axis, n_shards)
+    inters = _host_sorted_merge(r_tags, receiver_ids, s_tags, p, key,
+                                n_shards)
     return EngineRound(inters, time.perf_counter() - t0, 1,
                        shards=n_shards)
+
+
+def union_merge(a_tags64: np.ndarray, b_tags64: np.ndarray, *,
+                options: Optional[AlignOptions] = None) -> np.ndarray:
+    """Sorted union of two sorted u64 tag arrays (< 2^62) through the
+    bitonic-merge kernel — the delta-PSI run-compaction primitive.
+
+    Returns the merged FULL keys ``(tag << 1) | origin`` (origin 1 =
+    side A, 0 = side B; padding stripped), so the caller can resolve
+    same-tag collisions by origin — ``repro.psi.delta.TagIndex`` uses
+    origin as run recency.  One batched dispatch; ``options.mesh``
+    shards the (padded) row batch like every other round kind, and runs
+    past ``SINGLE_PASS_MAX_P`` take the tiled multi-pass merge inside
+    ``sorted_intersect`` automatically."""
+    options = options or AlignOptions()
+    key, n_shards = dispatch_key(options)
+    p = next_pow2(max(len(a_tags64), len(b_tags64), 1))
+    a_kh, a_kl = _host_key_rows(np.asarray(a_tags64, np.uint64), 1,
+                                PAD_A, p)
+    b_kh, b_kl = _host_key_rows(np.asarray(b_tags64, np.uint64), 0,
+                                PAD_B, p)
+    args, _ = pad_batch_rows((a_kh[None], a_kl[None], b_kh[None],
+                              b_kl[None]), n_shards)
+    _warm("union", args[0].shape[0], p, key)
+    with span("align.dispatch", kind="union", pairs=1, p=p,
+              shards=n_shards):
+        out = jax.block_until_ready(_dispatch("union", key)(*args))
+    m_kh = np.asarray(out[0])[0]
+    m_kl = np.asarray(out[1])[0]
+    merged = (m_kh.astype(np.uint64) << np.uint64(32)) \
+        | m_kl.astype(np.uint64)
+    return merged[m_kh < np.uint32(0x80000000)]

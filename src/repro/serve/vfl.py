@@ -91,6 +91,12 @@ class ServeStats(StatsMixin):
     slots: int = 0
     bottom_impl: str = "ref"
     quant: str = "none"
+    # delta-PSI streaming (DESIGN.md §13): rows dropped at submission
+    # because their ids left the aligned set, and aligned-set updates
+    # received.  Deliberately NOT in CONTRACT_FIELDS — the pinned smoke
+    # rows predate eligibility filtering and must stay byte-stable.
+    rejected_rows: int = 0
+    eligible_updates: int = 0
 
     CONTRACT_FIELDS = ("dispatches", "admitted_rows", "padded_slots",
                        "occupancy_sum", "completed", "forced_splits")
@@ -161,6 +167,9 @@ class VFLScoringEngine:
         self._slot_req: List[Optional[_Pending]] = [None] * self.slots
         self._slot_row = np.zeros(self.slots, np.int64)
         self._queue: "collections.deque[_Pending]" = collections.deque()
+        # None = no eligibility filter (every row scores); otherwise a
+        # sorted id array maintained by the delta-PSI stream
+        self._eligible: Optional[np.ndarray] = None
 
     @classmethod
     def from_report(cls, report, cfg, **kw) -> "VFLScoringEngine":
@@ -186,12 +195,38 @@ class VFLScoringEngine:
     def has_work(self) -> bool:
         return self.occupied_slots > 0 or len(self._queue) > 0
 
+    # ----------------------------------------------------- eligibility
+
+    def set_eligible(self, ids: Optional[Sequence[int]]) -> None:
+        """Install (or with ``None`` clear) the eligible-id filter —
+        rows submitted with ``row_ids`` outside it are rejected.  The
+        delta-PSI coordinator seeds this with the live aligned set
+        (``DeltaMPSI.stream_into``)."""
+        self._eligible = (None if ids is None
+                          else np.unique(np.asarray(ids, np.int64)))
+        self.stats.eligible_updates += 1
+
+    def apply_aligned_delta(self, added: Sequence[int],
+                            removed: Sequence[int]) -> None:
+        """Patch the eligible set with one aligned-set delta (the
+        ``AlignedDelta`` stream from ``repro.psi.delta``) — no pipeline
+        restart, queued/in-flight rows are unaffected."""
+        cur = (self._eligible if self._eligible is not None
+               else np.empty(0, np.int64))
+        cur = np.setdiff1d(cur, np.asarray(removed, np.int64))
+        self._eligible = np.union1d(cur, np.asarray(added, np.int64))
+        self.stats.eligible_updates += 1
+
     # ------------------------------------------------------- submission
 
-    def submit(self, rid: int, features: Sequence[np.ndarray]) -> None:
+    def submit(self, rid: int, features: Sequence[np.ndarray],
+               row_ids: Optional[Sequence[int]] = None) -> int:
         """Enqueue one request: ``features`` is the M clients' aligned
         slices for this user, each (rows, d_m) — or (d_m,) vectors for a
-        single row."""
+        single row.  ``row_ids`` (one aligned id per row) lets the
+        eligibility filter drop rows whose ids have left the aligned
+        set (``stats.rejected_rows``); a request with no eligible rows
+        is not enqueued.  Returns the number of rows enqueued."""
         feats = [np.atleast_2d(np.asarray(f, np.float32)) for f in features]
         if len(feats) != self.m:
             raise ValueError(f"expected {self.m} client slices, "
@@ -200,11 +235,23 @@ class VFLScoringEngine:
         for f, d in zip(feats, self.feature_dims):
             if f.shape != (rows, d):
                 raise ValueError(f"client slice {f.shape} != ({rows}, {d})")
+        if row_ids is not None and self._eligible is not None:
+            ids = np.asarray(row_ids, np.int64).reshape(-1)
+            if ids.shape[0] != rows:
+                raise ValueError(f"row_ids has {ids.shape[0]} entries "
+                                 f"for {rows} rows")
+            keep = np.isin(ids, self._eligible)
+            self.stats.rejected_rows += int(rows - keep.sum())
+            if not keep.any():
+                return 0
+            feats = [f[keep] for f in feats]
+            rows = int(keep.sum())
         block = np.zeros((self.m, rows, self.d_max), np.float32)
         for i, f in enumerate(feats):
             block[i, :, :f.shape[1]] = f
         self._queue.append(_Pending(int(rid), block))
         self.stats.requests += 1
+        return rows
 
     # -------------------------------------------------------- scheduler
 

@@ -582,12 +582,13 @@ def make_epoch_fn(cfg, feature_dims: Tuple[int, ...], mesh,
 
 def train_scan(partition, cfg, *, sample_weights: Optional[np.ndarray] = None,
                bandwidth: float = 10e9 / 8, latency: float = 2e-4,
-               mesh=None, shard_axis: Optional[str] = None,
-               bottom_impl: str = "ref", block_b: int = 512,
-               fuse_gather: bool = True, quant: Optional[str] = None,
-               verbose: bool = False) -> TrainReport:
+               options=None, verbose: bool = False) -> TrainReport:
     """Scan-based mini-batch Adam training to the paper's convergence
     criterion — one dispatch and one host sync per EPOCH.
+
+    Engine knobs ride on ``options=repro.config.EngineOptions(...)``
+    (``train_splitnn`` is the legacy-kwarg shim layer; this internal
+    engine entry takes only the config object):
 
     ``bottom_impl``: "ref" (block-diagonal slab oracle, one batched
     GEMM) | "pallas" (fused VMEM-resident kernel) | "loop" (legacy
@@ -602,7 +603,14 @@ def train_scan(partition, cfg, *, sample_weights: Optional[np.ndarray] = None,
     the per-step activation send to a 1-byte wire dtype (int8 also runs
     the int8 bottom kernels); needs the slab bottom path.
     """
+    from repro.config import EngineOptions
     from repro.core import splitnn as models
+
+    options = options or EngineOptions()
+    bottom_impl = options.bottom_impl
+    block_b = options.block_b
+    fuse_gather = options.fuse_gather
+    quant = options.quant
 
     n = partition.n_samples
     m = partition.n_clients
@@ -610,7 +618,7 @@ def train_scan(partition, cfg, *, sample_weights: Optional[np.ndarray] = None,
     d_max = max(feature_dims)
 
     mesh, data_axis, n_data, model_axis, n_model = resolve_train_mesh(
-        mesh, shard_axis)
+        options.mesh, options.shard_axis)
 
     use_slab = bottom_impl in ("ref", "pallas")
     if n_model > 1 and not use_slab:

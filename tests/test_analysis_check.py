@@ -206,13 +206,18 @@ def test_epoch_program_cache_bounded_and_clearable():
 
 
 def test_psi_dispatch_cache_bounded_and_clearable():
-    from repro.psi.engine import _dispatch, clear_dispatch_cache
-    from repro.sharding import resolve_batch_mesh
+    from repro.config import AlignOptions
+    from repro.psi.engine import (_dispatch, clear_dispatch_cache,
+                                  dispatch_key)
 
     assert _dispatch.cache_info().maxsize == 32
-    mesh, axis, _ = resolve_batch_mesh(None)
-    f1 = _dispatch("prf", "ref", mesh, axis)
-    assert _dispatch("prf", "ref", mesh, axis) is f1
+    key, _ = dispatch_key(AlignOptions(impl="ref"))
+    f1 = _dispatch("prf", key)
+    assert _dispatch("prf", key) is f1
+    # Any AlignOptions lowering to the same executable shares the entry.
+    key2, _ = dispatch_key(AlignOptions(impl="ref", protocol="oprf",
+                                        overlap=0.3))
+    assert _dispatch("prf", key2) is f1
     clear_dispatch_cache()
     assert _dispatch.cache_info().currsize == 0
-    assert _dispatch("prf", "ref", mesh, axis) is not f1
+    assert _dispatch("prf", key) is not f1

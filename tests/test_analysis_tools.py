@@ -248,6 +248,33 @@ def test_lint_inline_suppression():
     assert _rules(wrong_rule) == ["call-time-jit"]
 
 
+def _kwonly_fn(name, n, extra=""):
+    kws = ", ".join(f"k{i}=0" for i in range(n))
+    return f"def {name}(x, *, {kws}{extra}):\n    return x\n"
+
+
+def test_lint_config_sprawl_fires_over_threshold():
+    assert _rules(_kwonly_fn("run", 9)) == ["config-sprawl"]
+    assert _lint(_kwonly_fn("run", 8)) == []          # at the limit: ok
+
+
+def test_lint_config_sprawl_options_param_exempt():
+    assert _lint(_kwonly_fn("run", 9, ", options=None")) == []
+    assert _lint(_kwonly_fn("run", 9, ", align=None")) == []
+
+
+def test_lint_config_sprawl_private_and_nested_exempt():
+    assert _lint(_kwonly_fn("_run", 9)) == []
+    nested = "def outer():\n" + "    " + \
+        _kwonly_fn("inner", 9).replace("\n    ", "\n        ")
+    assert _lint(nested) == []
+
+
+def test_lint_config_sprawl_inline_suppression():
+    src = "# lint-ok: config-sprawl (test)\n" + _kwonly_fn("run", 9)
+    assert _lint(src) == []
+
+
 def test_lint_baseline_matching(tmp_path):
     from repro.analysis.lint import (lint_source, load_baseline,
                                      split_baselined)

@@ -1,0 +1,225 @@
+"""Streaming delta-PSI (repro.psi.delta, DESIGN.md §13).
+
+The load-bearing property: after ANY sequence of join/leave deltas,
+``DeltaMPSI.aligned`` is byte-identical to a full Tree-MPSI re-run
+over the parties' current id sets — on both the host and the batched
+device backend, at any compaction pressure.
+"""
+import numpy as np
+import pytest
+
+from repro.config import AlignOptions
+from repro.core.mpsi import tree_mpsi
+from repro.psi import AlignedDelta, DeltaMPSI, TagIndex
+from repro.psi.delta import MAX_ID
+
+
+def _sets(rng, m=3, n=400, universe=2000):
+    return [rng.choice(universe, size=n, replace=False).astype(np.int64)
+            for _ in range(m)]
+
+
+def _random_delta(rng, current, universe=2000, k=40):
+    pool = np.setdiff1d(np.arange(universe, dtype=np.int64), current)
+    joins = rng.choice(pool, size=min(k, pool.size), replace=False)
+    leaves = (rng.choice(current, size=min(k, current.size), replace=False)
+              if current.size else np.empty(0, np.int64))
+    return joins, leaves
+
+
+# ---------------------------------------------------------------- TagIndex
+
+
+def test_tag_index_materialize_matches_set_algebra():
+    rng = np.random.default_rng(0)
+    idx = TagIndex(rng.choice(1000, size=300, replace=False))
+    truth = set(int(i) for i in idx.materialize())
+    for _ in range(20):
+        cur = np.fromiter(truth, np.int64) if truth else np.empty(0, np.int64)
+        joins, leaves = _random_delta(rng, np.sort(cur), universe=1000, k=25)
+        idx.apply_delta(joins, leaves)
+        truth |= set(int(j) for j in joins)
+        truth -= set(int(v) for v in np.setdiff1d(leaves, joins))
+        assert np.array_equal(idx.materialize(),
+                              np.sort(np.fromiter(truth, np.int64)))
+
+
+def test_tag_index_contains_newest_wins():
+    idx = TagIndex([1, 2, 3], max_runs=8)
+    idx.apply_delta(joins=[4], leaves=[2])
+    idx.apply_delta(joins=[2], leaves=[4, 9])
+    assert idx.contains([1, 2, 3, 4, 9]).tolist() == [True, True, True,
+                                                      False, False]
+
+
+def test_tag_index_join_beats_stale_leave():
+    idx = TagIndex([])
+    idx.apply_delta(joins=[7], leaves=[7])     # same delta: join wins
+    assert idx.materialize().tolist() == [7]
+
+
+def test_tag_index_compaction_invariant():
+    rng = np.random.default_rng(1)
+    base = rng.choice(1500, size=400, replace=False)
+    deltas = []
+    cur = np.sort(base.astype(np.int64))
+    for _ in range(15):
+        deltas.append(_random_delta(rng, cur, universe=1500, k=30))
+        j, v = deltas[-1]
+        cur = np.union1d(np.setdiff1d(cur, np.setdiff1d(v, j)), j)
+    results = []
+    for max_runs in (2, 4, 16):
+        idx = TagIndex(base, max_runs=max_runs)
+        for j, v in deltas:
+            idx.apply_delta(j, v)
+        results.append(idx.materialize())
+    assert np.array_equal(results[0], results[1])
+    assert np.array_equal(results[0], results[2])
+    # tight run budget really compacted; full compact is a no-op change
+    idx.compact(full=True)
+    assert len(idx.runs) == 1
+    assert np.array_equal(idx.materialize(), results[0])
+
+
+def test_tag_index_validation():
+    with pytest.raises(ValueError, match="max_runs"):
+        TagIndex([], max_runs=1)
+    with pytest.raises(ValueError, match="2\\^61"):
+        TagIndex([MAX_ID])
+    with pytest.raises(ValueError, match="2\\^61"):
+        TagIndex([-1])
+
+
+# ----------------------------------------------- byte-identity property
+
+
+def _assert_matches_full_rerun(dm):
+    full = tree_mpsi([dm.party_set(q) for q in range(dm.n_parties)],
+                     options=AlignOptions())
+    assert dm.aligned.dtype == full.intersection.dtype
+    assert dm.aligned.tobytes() == np.asarray(full.intersection).tobytes()
+
+
+def test_delta_mpsi_byte_identical_to_full_rerun_host():
+    rng = np.random.default_rng(2)
+    dm = DeltaMPSI(_sets(rng), options=AlignOptions(), max_runs=3)
+    _assert_matches_full_rerun(dm)
+    for step in range(12):
+        party = int(rng.integers(dm.n_parties))
+        joins, leaves = _random_delta(rng, dm.party_set(party))
+        dm.apply_delta(party, joins, leaves)
+        _assert_matches_full_rerun(dm)
+    assert dm.stats.deltas_applied == 12
+    assert dm.stats.compactions > 0            # max_runs=3 forces merges
+
+
+def test_delta_mpsi_edge_deltas():
+    rng = np.random.default_rng(3)
+    dm = DeltaMPSI(_sets(rng, m=2))
+    before = dm.aligned.copy()
+    upd = dm.apply_delta(0)                      # empty delta
+    assert upd.added.size == 0 and upd.removed.size == 0
+    assert np.array_equal(dm.aligned, before)
+    # duplicate ids in the delta are canonicalized
+    joins = np.array([5000, 5000, 5001], np.int64)
+    dm.apply_delta(0, joins=joins)
+    dm.apply_delta(1, joins=joins)
+    _assert_matches_full_rerun(dm)
+    assert np.isin([5000, 5001], dm.aligned).all()
+    # leave of the just-joined ids drops them from the aligned set
+    dm.apply_delta(1, leaves=[5000])
+    assert not np.isin(5000, dm.aligned)
+    _assert_matches_full_rerun(dm)
+
+
+def test_delta_mpsi_byte_identical_device_backend():
+    rng = np.random.default_rng(4)
+    opts = AlignOptions(psi_backend="device", protocol="oprf", impl="ref")
+    dm = DeltaMPSI(_sets(rng, m=3, n=200, universe=1200), options=opts,
+                   max_runs=3)
+    for step in range(5):
+        party = step % dm.n_parties
+        joins, leaves = _random_delta(rng, dm.party_set(party),
+                                      universe=1200, k=25)
+        dm.apply_delta(party, joins, leaves)
+        _assert_matches_full_rerun(dm)
+    assert dm.stats.device_dispatches > dm.bootstrap.device_dispatches
+
+
+# ------------------------------------------------------------- accounting
+
+
+def test_delta_accounting_monotone_and_cheaper_than_bootstrap():
+    rng = np.random.default_rng(5)
+    dm = DeltaMPSI(_sets(rng, n=800, universe=4000))
+    assert dm.stats.bootstrap_bytes == dm.bootstrap.total_bytes
+    prev = dm.stats.total_bytes
+    per_delta = []
+    for _ in range(4):
+        party = int(rng.integers(dm.n_parties))
+        joins, leaves = _random_delta(rng, dm.party_set(party),
+                                      universe=4000, k=8)
+        dm.apply_delta(party, joins, leaves)
+        assert dm.stats.total_bytes > prev
+        per_delta.append(dm.stats.total_bytes - prev)
+        prev = dm.stats.total_bytes
+    # a small delta costs far less traffic than the full bootstrap
+    assert max(per_delta) < dm.stats.bootstrap_bytes / 10
+    assert dm.stats.simulated_seconds > dm.stats.bootstrap_seconds
+
+
+# ------------------------------------------------------------- streaming
+
+
+def test_delta_mpsi_listeners_and_versioning():
+    rng = np.random.default_rng(6)
+    dm = DeltaMPSI(_sets(rng, m=2))
+    seen = []
+    dm.subscribe(seen.append)
+    u1 = dm.apply_delta(0, joins=[9001])
+    u2 = dm.apply_delta(1, joins=[9001])
+    assert [u.version for u in seen] == [1, 2]
+    assert isinstance(u1, AlignedDelta) and u2.added.tolist() == [9001]
+    assert np.array_equal(seen[-1].aligned, dm.aligned)
+
+
+def test_stream_into_scoring_engine_filters_rows():
+    from conftest import make_cls_partition
+    from repro.core import splitnn as models
+    from repro.core.splitnn import SplitNNConfig
+    from repro.serve.vfl import VFLScoringEngine
+
+    rng = np.random.default_rng(7)
+    dm = DeltaMPSI(_sets(rng, m=2, n=60, universe=200))
+    part = make_cls_partition(n=8, d=6, clients=2, seed=0)
+    cfg = SplitNNConfig(model="lr", n_classes=2)
+    params = models.init_splitnn(
+        cfg, [f.shape[1] for f in part.client_features])
+    eng = VFLScoringEngine(params, cfg, slots=4)
+
+    dm.stream_into(eng)
+    assert eng.stats.eligible_updates == 1
+    aligned = dm.aligned
+    assert aligned.size >= 2
+    ok, gone = int(aligned[0]), int(aligned[1])
+
+    feats = [f[:2] for f in part.client_features]
+    assert eng.submit(0, feats, row_ids=[ok, gone]) == 2
+
+    dm.apply_delta(0, leaves=[gone])           # streams into the engine
+    assert eng.stats.eligible_updates == 2
+    assert eng.submit(1, feats, row_ids=[ok, gone]) == 1
+    assert eng.stats.rejected_rows == 1
+    assert eng.submit(2, feats, row_ids=[gone, gone]) == 0
+    assert eng.stats.rejected_rows == 3
+
+
+# ------------------------------------------------------------- validation
+
+
+def test_delta_mpsi_rejects_legacy_style():
+    rng = np.random.default_rng(8)
+    with pytest.raises(TypeError, match="AlignOptions"):
+        DeltaMPSI(_sets(rng, m=2), options={"protocol": "rsa"})
+    with pytest.raises(ValueError, match="two parties"):
+        DeltaMPSI(_sets(rng, m=1))

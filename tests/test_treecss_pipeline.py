@@ -92,8 +92,11 @@ def test_align_selects_intersected_rows_not_prefix():
 
     part = make_cls_partition(n=300, d=9, seed=5)
     seed = 5
-    aligned, stats, _, _ = _align(part, "tree", overlap=0.7,
-                                  protocol="rsa", seed=seed)
+    from repro.config import AlignOptions
+    aligned, stats, _, _ = _align(part, "tree",
+                                  align=AlignOptions(overlap=0.7,
+                                                     protocol="rsa"),
+                                  seed=seed)
     # reconstruct the row <-> id map _align used (same deterministic seed)
     sets, core = make_id_universe(part.n_clients, part.n_samples, 0.7,
                                   seed=seed)
